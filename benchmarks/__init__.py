@@ -1,0 +1,2 @@
+# Benchmark harness: one module per paper table/figure, plus kernel
+# microbenches and the dry-run-driven roofline terms.

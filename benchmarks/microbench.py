@@ -1,0 +1,98 @@
+"""Wall-clock microbenchmarks of the functional JAX paths (CPU here; the
+same harness runs on TPU).  Reports µs/call for the public ops."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _time(fn: Callable[[], object], iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_aes_bulk() -> List[Row]:
+    from repro.apps import aes_app
+    rng = np.random.default_rng(0)
+    key = rng.integers(0, 256, size=(16,), dtype=np.uint8)
+    rows: List[Row] = []
+    for n in (1024, 16384):
+        pts = jnp.asarray(rng.integers(0, 256, size=(n, 16), dtype=np.uint8))
+        us = _time(lambda: aes_app.aes_encrypt(pts, key))
+        rows.append((f"aes_encrypt/bulk{n}", us, "us_per_call"))
+        rows.append((f"aes_encrypt/bulk{n}_MBps", n * 16 / us, "MB/s"))
+    return rows
+
+
+def bench_bitslice_mvm() -> List[Row]:
+    from repro.kernels.bitslice_mvm import bitslice_mvm
+    rng = np.random.default_rng(1)
+    rows: List[Row] = []
+    for (m, k, n) in [(128, 512, 512), (512, 1024, 1024)]:
+        x = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int32)
+        w = jnp.asarray(rng.integers(-127, 128, size=(k, n)), jnp.int32)
+        us = _time(lambda: bitslice_mvm(x, w, weight_bits=8,
+                                        bits_per_slice=2), iters=3)
+        rows.append((f"bitslice_mvm/{m}x{k}x{n}", us, "us_per_call"))
+    return rows
+
+
+def bench_gf2_mvm() -> List[Row]:
+    from repro.kernels.gf2_mvm import gf2_mvm
+    rng = np.random.default_rng(2)
+    rows: List[Row] = []
+    for m in (1024, 8192):
+        x = jnp.asarray(rng.integers(0, 2, size=(m, 128)), jnp.int8)
+        a = jnp.asarray(rng.integers(0, 2, size=(128, 128)), jnp.int8)
+        us = _time(lambda: gf2_mvm(x, a), iters=3)
+        rows.append((f"gf2_mvm/{m}x128x128", us, "us_per_call"))
+    return rows
+
+
+def bench_ibert() -> List[Row]:
+    from repro.core import ibert
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(64, 1024)), jnp.float32)
+    rows: List[Row] = []
+    sm = jax.jit(lambda t: ibert.softmax_quantized(t, 8))
+    gl = jax.jit(lambda t: ibert.gelu_quantized(t, 8))
+    ln = jax.jit(lambda t: ibert.layernorm_quantized(t, 8))
+    rows.append(("ibert/softmax_64x1024", _time(lambda: sm(x)), "us_per_call"))
+    rows.append(("ibert/gelu_64x1024", _time(lambda: gl(x)), "us_per_call"))
+    rows.append(("ibert/layernorm_64x1024", _time(lambda: ln(x)),
+                 "us_per_call"))
+    return rows
+
+
+def bench_pum_linear() -> List[Row]:
+    from repro.config import PUMConfig
+    from repro.core.pum_linear import pum_linear
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(512, 512)) * 0.05, jnp.float32)
+    rows: List[Row] = []
+    for mode in ("bf16", "int8", "pum"):
+        cfg = PUMConfig(mode=mode)
+        f = jax.jit(lambda a, b: pum_linear(a, b, cfg))
+        rows.append((f"pum_linear/{mode}_256x512x512", _time(lambda: f(x, w)),
+                     "us_per_call"))
+    return rows
+
+
+ALL_MICRO = {
+    "aes_bulk": bench_aes_bulk,
+    "bitslice_mvm": bench_bitslice_mvm,
+    "gf2_mvm": bench_gf2_mvm,
+    "ibert": bench_ibert,
+    "pum_linear": bench_pum_linear,
+}

@@ -1,0 +1,143 @@
+"""Regenerate the paper's evaluation figures from the cost model.
+
+One function per figure; each returns a list of CSV rows
+(name, value, unit) and prints them.  Paper-claimed values are attached in
+the final column so EXPERIMENTS.md diffs are mechanical.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core import costmodel as cm
+
+Row = Tuple[str, float, str]
+
+
+def _models():
+    return (cm.DarthPUM("sar"), cm.DigitalPUM(), cm.BaselineCPUAnalog(),
+            cm.AppAccel(), cm.GPU())
+
+
+def fig07_motivation() -> List[Row]:
+    """Fig. 7: AES throughput of digital / analog+CPU / naive hybrid sweep,
+    normalised to digital PUM with OSCAR."""
+    rows: List[Row] = []
+    d0 = cm.DigitalPUM().aes().throughput
+    rows.append(("fig07/digital_oscar", 1.0, "x"))
+    rows.append(("fig07/digital_ideal",
+                 cm.DigitalPUM(ideal_logic=True).aes().throughput / d0, "x"))
+    rows.append(("fig07/analog_cpu",
+                 cm.BaselineCPUAnalog().aes().throughput / d0, "x"))
+    best = 0.0
+    best_f = 0.0
+    for i, f in enumerate([0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.4, 0.5, 0.7]):
+        t = cm.naive_hybrid_aes(f) / d0
+        rows.append((f"fig07/hybrid_H{i + 1}_f{f:.2f}", t, "x"))
+        if t > best:
+            best, best_f = t, f
+    ideal_at_best = cm.naive_hybrid_aes(best_f, ideal_logic=True) / d0
+    rows.append(("fig07/hybrid_peak", best, "x  (paper: 3.54x over digital)"))
+    rows.append(("fig07/ideal_gain_at_peak", ideal_at_best / best - 1.0,
+                 "frac (paper: 3.2%)"))
+    return rows
+
+
+def fig13_throughput() -> List[Row]:
+    """Fig. 13: throughput normalised to Baseline, all three workloads."""
+    rows: List[Row] = []
+    paper = {"aes": 59.4, "resnet20": 14.8, "encoder": 45.6}
+    for wl in ("aes", "resnet20", "encoder"):
+        rs = {m.name: getattr(m, wl)() for m in _models()}
+        b = rs["Baseline"]
+        for name, r in rs.items():
+            note = "x"
+            if name == "DARTH-PUM":
+                note = f"x (paper: {paper[wl]}x)"
+            rows.append((f"fig13/{wl}/{name}", r.speedup_over(b), note))
+    return rows
+
+
+def fig14_aes_breakdown() -> List[Row]:
+    """Fig. 14: AES per-kernel latency breakdown (cycles per block)."""
+    rows: List[Row] = []
+    d = cm.DarthPUM("sar").aes()
+    for k in ("sub_c", "mix_c", "ark_c", "adc_cyc", "dce_cyc"):
+        rows.append((f"fig14/darth/{k}", d.detail[k], "cycles"))
+    b = cm.BaselineCPUAnalog().aes()
+    for k in ("cpu_s", "xfer_s", "mix_s"):
+        rows.append((f"fig14/baseline/{k}", b.detail[k] * 1e9, "ns"))
+    rows.append(("fig14/latency_ratio", b.latency_s / d.latency_s,
+                 "x (paper: DARTH latency -53.7%)"))
+    return rows
+
+
+def fig15_resnet_layers() -> List[Row]:
+    """Fig. 15: per-layer speedup for ResNet-20, DARTH vs Baseline."""
+    rows: List[Row] = []
+    d = cm.DarthPUM("sar").resnet20()
+    b = cm.BaselineCPUAnalog().resnet20()
+    for name in d.detail:
+        if name in b.detail:
+            rows.append((f"fig15/{name}", b.detail[name] / d.detail[name],
+                         "x"))
+    return rows
+
+
+def fig16_energy() -> List[Row]:
+    """Fig. 16: energy savings normalised to Baseline."""
+    rows: List[Row] = []
+    paper = {"aes": 39.6, "resnet20": 51.2, "encoder": 110.7}
+    for wl in ("aes", "resnet20", "encoder"):
+        rs = {m.name: getattr(m, wl)() for m in _models()}
+        b = rs["Baseline"]
+        for name, r in rs.items():
+            note = "x"
+            if name == "DARTH-PUM":
+                note = f"x (paper: {paper[wl]}x)"
+            rows.append((f"fig16/{wl}/{name}", r.energy_saving_over(b), note))
+    return rows
+
+
+def fig17_adc() -> List[Row]:
+    """Fig. 17: SAR vs ramp ADCs (throughput ratio per workload)."""
+    rows: List[Row] = []
+    for wl in ("aes", "resnet20", "encoder"):
+        s = getattr(cm.DarthPUM("sar"), wl)()
+        r = getattr(cm.DarthPUM("ramp"), wl)()
+        note = "x ramp/sar"
+        if wl == "aes":
+            note += " (paper: ramp wins only for AES)"
+        else:
+            note += " (paper: SAR 1.5x better overall)"
+        rows.append((f"fig17/{wl}/ramp_over_sar",
+                     r.throughput / s.throughput, note))
+    return rows
+
+
+def fig18_gpu() -> List[Row]:
+    """Fig. 18: iso-area comparison with the RTX 4090."""
+    rows: List[Row] = []
+    sp = []
+    es = []
+    for wl in ("aes", "resnet20", "encoder"):
+        d = getattr(cm.DarthPUM("sar"), wl)()
+        g = getattr(cm.GPU(), wl)()
+        sp.append(d.throughput / g.throughput)
+        es.append(g.energy_j / d.energy_j)
+        rows.append((f"fig18/{wl}/throughput", sp[-1], "x over GPU"))
+        rows.append((f"fig18/{wl}/energy", es[-1], "x over GPU"))
+    rows.append(("fig18/avg_throughput", sum(sp) / 3,
+                 "x (paper: 11.8x)"))
+    rows.append(("fig18/avg_energy", sum(es) / 3, "x (paper: 7.5x)"))
+    return rows
+
+
+ALL_FIGURES = {
+    "fig07": fig07_motivation,
+    "fig13": fig13_throughput,
+    "fig14": fig14_aes_breakdown,
+    "fig15": fig15_resnet_layers,
+    "fig16": fig16_energy,
+    "fig17": fig17_adc,
+    "fig18": fig18_gpu,
+}

@@ -1,0 +1,53 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,value,unit`` CSV rows:
+  * paper-figure regenerations (cost model; Figs. 7, 13-18) with the
+    paper's claimed values attached for comparison;
+  * wall-clock microbenchmarks of the functional JAX paths;
+  * the dry-run roofline summary, if the table file produced by
+    ``repro.launch.dryrun`` exists.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list: fig07,...,micro")
+    ap.add_argument("--skip-micro", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import microbench, paper_figures
+
+    only = set(filter(None, args.only.split(",")))
+    print("name,value,unit")
+
+    for name, fn in paper_figures.ALL_FIGURES.items():
+        if only and name not in only:
+            continue
+        for row in fn():
+            print(f"{row[0]},{row[1]:.6g},{row[2]}")
+
+    if not args.skip_micro and (not only or "micro" in only):
+        for name, fn in microbench.ALL_MICRO.items():
+            for row in fn():
+                print(f"{row[0]},{row[1]:.6g},{row[2]}")
+
+    if not only or "noise" in only:
+        from benchmarks import noise_accuracy
+        for row in noise_accuracy.sweep():
+            print(f"{row[0]},{row[1]:.6g},{row[2]}")
+
+    # roofline summary (written by repro.launch.dryrun, if present)
+    table = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "roofline.csv")
+    if (not only or "roofline" in only) and os.path.exists(table):
+        with open(table) as f:
+            for line in f.read().strip().splitlines()[1:]:
+                print(f"roofline/{line}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Batched LLM serving with PUM-quantised weights (paper §5.2 analogue):
+prefill + decode against every execution mode, comparing outputs.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py [--arch glm4-9b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.config import PUMConfig
+from repro.models import lm
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+
+    base = configs.get_reduced(args.arch)
+    params = lm.init_params(base, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, 8), 0,
+                                base.vocab_size)
+    outs = {}
+    for mode in ("bf16", "int8", "pum"):
+        cfg = base.replace(pum=PUMConfig(mode=mode))
+        eng = ServeEngine(cfg, params, max_len=8 + args.gen + 1)
+        t0 = time.perf_counter()
+        out = eng.generate(prompt, args.gen)
+        dt = time.perf_counter() - t0
+        outs[mode] = np.asarray(out)
+        print(f"mode={mode:5s}: {args.batch * args.gen / dt:6.1f} tok/s "
+              f"(incl. compile)  sample={out[0, 8:14].tolist()}")
+    agree_int8 = (outs["bf16"] == outs["int8"]).mean()
+    agree_pum = (outs["bf16"] == outs["pum"]).mean()
+    print(f"token agreement vs bf16: int8={agree_int8:.2f} pum={agree_pum:.2f}"
+          f"  (quantised serving preserves most greedy tokens)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# The paper's three evaluated applications, mapped onto the hybrid PUM
+# execution model: AES (§5.3), ResNet-20 (§5.1), LLM encoder (§5.2).

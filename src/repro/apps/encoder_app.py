@@ -1,0 +1,100 @@
+"""LLM encoder on DARTH-PUM (paper §5.2).
+
+The paper's mapping, followed exactly:
+  * feed-forward network (static weights) -> ACE via PUMLinear;
+  * QKV / output projections (static)     -> ACE via PUMLinear;
+  * attention score/value matmuls (dynamic matrices) -> DCE (plain integer
+    compute: "the matrices used in the attention mechanism rely on dynamic
+    updates ... we execute the computations needed by the attention
+    mechanism in the DCE");
+  * softmax / layer-norm / GELU -> DCE using I-BERT integer algorithms.
+
+A compact functional encoder (BERT-style, post-LN) whose every op routes
+per the mapping; ``pum.ibert=True`` turns on the integer nonlinearities.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import PUMConfig
+from repro.core import ibert
+from repro.core.pum_linear import pum_linear
+
+Params = Dict[str, Any]
+
+
+def _init_linear(key, k, n, scale=None):
+    scale = scale or 1.0 / np.sqrt(k)
+    return jax.random.normal(key, (k, n), jnp.float32) * scale
+
+
+def encoder_init(key, *, layers: int = 4, d_model: int = 256,
+                 d_ff: int = 1024, heads: int = 4,
+                 vocab: int = 1000) -> Params:
+    keys = jax.random.split(key, layers * 6 + 2)
+    p: Params = {"embed": jax.random.normal(keys[0], (vocab, d_model)) * 0.02,
+                 "pos": jax.random.normal(keys[1], (2048, d_model)) * 0.02,
+                 "layers": []}
+    ki = 2
+    for _ in range(layers):
+        lp = {"wq": _init_linear(keys[ki], d_model, d_model),
+              "wk": _init_linear(keys[ki + 1], d_model, d_model),
+              "wv": _init_linear(keys[ki + 2], d_model, d_model),
+              "wo": _init_linear(keys[ki + 3], d_model, d_model),
+              "w1": _init_linear(keys[ki + 4], d_model, d_ff),
+              "w2": _init_linear(keys[ki + 5], d_ff, d_model)}
+        ki += 6
+        p["layers"].append(lp)
+    return p
+
+
+def _softmax(x, pum: PUMConfig):
+    if pum.ibert:
+        return ibert.softmax_quantized(x, bits=8, axis=-1)
+    return jax.nn.softmax(x, axis=-1)
+
+
+def _layernorm(x, pum: PUMConfig):
+    if pum.ibert:
+        return ibert.layernorm_quantized(x, bits=8, axis=-1)
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5)
+
+
+def _gelu(x, pum: PUMConfig):
+    if pum.ibert:
+        return ibert.gelu_quantized(x, bits=8)
+    return jax.nn.gelu(x, approximate=False)
+
+
+def encoder_apply(p: Params, tokens: jax.Array, pum: PUMConfig,
+                  heads: int = 4) -> jax.Array:
+    """tokens: [B, S] int32 -> hidden states [B, S, D]."""
+    b, s = tokens.shape
+    h = p["embed"][tokens] + p["pos"][:s][None]
+    d = h.shape[-1]
+    hd = d // heads
+    for lp in p["layers"]:
+        # ---- attention: projections on ACE, score/value matmuls in DCE
+        q = pum_linear(h, lp["wq"], pum).reshape(b, s, heads, hd)
+        k = pum_linear(h, lp["wk"], pum).reshape(b, s, heads, hd)
+        v = pum_linear(h, lp["wv"], pum).reshape(b, s, heads, hd)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        attn = _softmax(scores, pum)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b, s, d)
+        h = _layernorm(h + pum_linear(ctx, lp["wo"], pum), pum)
+        # ---- FFN on the ACE
+        f = _gelu(pum_linear(h, lp["w1"], pum), pum)
+        h = _layernorm(h + pum_linear(f, lp["w2"], pum), pum)
+    return h
+
+
+def encoder_logits(p: Params, tokens: jax.Array, pum: PUMConfig,
+                   heads: int = 4) -> jax.Array:
+    h = encoder_apply(p, tokens, pum, heads)
+    return h @ p["embed"].T          # tied head

@@ -1,0 +1,45 @@
+"""ResNet-20 application driver (paper §5.1 / §7.5).
+
+No CIFAR-10 is available offline, so the §7.5 noise/accuracy experiment is
+reproduced as an *agreement* study: classification agreement between the
+float model and the PUM-simulated model (quantised + analog noise) on a
+synthetic image distribution, over a sweep of noise levels.  This captures
+the paper's claim shape (accuracy parity at the operating point, graceful
+degradation beyond) without the dataset.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ADCConfig, NoiseConfig, PUMConfig
+from repro.models import resnet
+
+
+def synthetic_images(key, n: int, classes: int = 10) -> Tuple[jax.Array,
+                                                              jax.Array]:
+    """Class-conditional Gaussian blobs over 32x32x3 (deterministic)."""
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (n,), 0, classes)
+    protos = jax.random.normal(k2, (classes, 32, 32, 3)) * 0.5
+    noise = jax.random.normal(jax.random.fold_in(key, 7), (n, 32, 32, 3))
+    return protos[labels] + 0.3 * noise, labels
+
+
+def agreement_under_noise(prog_sigma: float, n: int = 16,
+                          width: int = 8, seed: int = 0) -> float:
+    """Fraction of predictions where the noisy-PUM model agrees with the
+    float model (random-init network, synthetic inputs)."""
+    key = jax.random.PRNGKey(seed)
+    params = resnet.resnet20_init(key, width=width)
+    x, _ = synthetic_images(jax.random.fold_in(key, 1), n)
+    logits_f = resnet.resnet20_apply(params, x, PUMConfig(mode="bf16"))
+    cfg = PUMConfig(mode="pum", weight_bits=8, bits_per_slice=2,
+                    noise=NoiseConfig(enable=prog_sigma > 0,
+                                      prog_sigma=prog_sigma),
+                    adc=ADCConfig("sar", bits=10))
+    logits_p = resnet.resnet20_apply(params, x, cfg)
+    return float(jnp.mean(jnp.argmax(logits_f, -1) == jnp.argmax(logits_p, -1)))

@@ -1,0 +1,254 @@
+"""Frozen dataclass configuration system for the repro framework.
+
+Every architecture in ``repro.configs`` produces a :class:`ModelConfig`;
+shapes produce a :class:`ShapeConfig`; the launcher composes them with a
+:class:`MeshConfig` and (for training) a :class:`TrainConfig`.
+
+All configs are plain frozen dataclasses so they hash, print, and diff
+cleanly, and so they can be embedded into jitted closures without
+retracing hazards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# PUM (paper-technique) execution config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ADCConfig:
+    """Analog-to-digital converter model (paper Table 2).
+
+    ``sar``: 1-cycle conversion, 2 units per HCT (multiplexed over bitlines).
+    ``ramp``: 256-cycle full conversion, 1 unit, all 64 bitlines in parallel;
+    supports early termination at ``early_levels`` levels (paper: AES needs
+    only 4 states -> 4 cycles).
+    """
+    kind: str = "sar"                  # "sar" | "ramp"
+    bits: int = 8                      # output resolution
+    early_levels: int = 0              # ramp-only: terminate after N levels (0 = full)
+
+    def __post_init__(self):
+        assert self.kind in ("sar", "ramp"), self.kind
+
+
+@dataclass(frozen=True)
+class NoiseConfig:
+    """Analog non-ideality model (CrossSim-style proxies).
+
+    prog_sigma  — programming noise: relative stddev of stored conductance.
+    read_sigma  — per-MVM read noise on bitline current (absolute, in LSBs).
+    ir_alpha    — IR-drop proxy: measured current droops quadratically with
+                  total bitline current, I_meas = I - ir_alpha * I^2.
+    """
+    enable: bool = False
+    prog_sigma: float = 0.0
+    read_sigma: float = 0.0
+    ir_alpha: float = 0.0
+
+
+@dataclass(frozen=True)
+class PUMConfig:
+    """How linear layers execute (the paper's technique as a feature).
+
+    mode:
+      "bf16" — standard dense matmul (baseline float path).
+      "int8" — TPU-native symmetric int8 quantised matmul (deployment path;
+               single-plane special case of bit-slicing).
+      "pum"  — bit-sliced execution: weights decomposed into
+               ``weight_bits / bits_per_slice`` planes (vACore abstraction),
+               integer plane-matmuls recombined by shift-and-add.  The
+               Pallas kernel ``kernels/bitslice_mvm`` fuses recombination
+               into the matmul epilogue (the paper's shift-during-transfer
+               optimisation, §4.1).
+    """
+    mode: str = "bf16"                 # "bf16" | "int8" | "pum"
+    weight_bits: int = 8
+    bits_per_slice: int = 2            # bits stored per analog cell
+    input_bits: int = 8
+    adc: ADCConfig = field(default_factory=ADCConfig)
+    noise: NoiseConfig = field(default_factory=NoiseConfig)
+    use_kernel: bool = False           # route through the Pallas kernel
+    ibert: bool = False                # integer-only nonlinearities (DCE role)
+
+    def __post_init__(self):
+        assert self.mode in ("bf16", "int8", "pum"), self.mode
+        if self.mode == "pum":
+            assert self.weight_bits % self.bits_per_slice == 0
+
+    @property
+    def n_slices(self) -> int:
+        # one sign bit handled by the differential encoding; magnitude planes
+        return max(1, (self.weight_bits - 1 + self.bits_per_slice - 1)
+                   // self.bits_per_slice)
+
+
+# ---------------------------------------------------------------------------
+# Model architecture config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 0
+    # capacity factor for expert dispatch (dropless-ish; tokens beyond
+    # capacity are dropped, standard for TPU MoE)
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"     # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: int = 0                  # 0 -> d_model // num_heads
+    # attention
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    attn_logit_softcap: float = 0.0
+    # MoE
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    moe_layer_period: int = 1          # every k-th layer is MoE (jamba: 2)
+    # hybrid (jamba): attention every `attn_period` layers, rest are Mamba
+    attn_period: int = 0               # 0 -> all layers attention
+    # ssm (mamba) params
+    ssm_state_dim: int = 16
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+    # xlstm: pattern of block kinds, e.g. ("slstm","mlstm",...)
+    xlstm_slstm_every: int = 0         # 0 -> not xlstm; else every k-th is sLSTM
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500            # whisper: 30s @ 50 Hz after conv stub
+    # vlm
+    vision_stub: bool = False
+    num_image_tokens: int = 0
+    # norms / activations
+    norm_eps: float = 1e-5
+    use_rmsnorm: bool = True
+    activation: str = "silu"           # silu | gelu
+    tie_embeddings: bool = False
+    # numerics
+    dtype: str = "bfloat16"
+    # paper technique
+    pum: PUMConfig = field(default_factory=PUMConfig)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shape config (the assigned shape grid)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str = "train_4k"
+    seq_len: int = 4096
+    global_batch: int = 256
+    kind: str = "train"            # train | prefill | decode
+
+    @property
+    def is_serve(self) -> bool:
+        return self.kind in ("prefill", "decode")
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k":   ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Mesh / distribution config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+    # how the pod axis is used when present: "data" (DP across pods) or
+    # "pipeline" (2-stage PP)
+    pod_role: str = "data"
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        """Axes gradients are reduced over (pod acts as extra DP by default)."""
+        out = []
+        if "pod" in self.axes and self.pod_role == "data":
+            out.append("pod")
+        out.append("data")
+        return tuple(out)
+
+
+@dataclass(frozen=True)
+class ShardingConfig:
+    """Knobs the perf hillclimb iterates over."""
+    fsdp: bool = True                  # shard params over data axis too (ZeRO-3)
+    seq_shard: bool = True             # sequence-parallel activations in norm regions
+    remat: str = "block"               # "none" | "block" | "full"
+    scan_layers: bool = True           # lax.scan over layer stack
+    grad_compress: bool = False        # int8 all-reduce with error feedback
+    donate: bool = True
+    # cast params to bf16 before use so FSDP all-gathers move bf16, not
+    # f32 master weights (halves weight-gather bytes)
+    bf16_params: bool = False
+    # decode-time weight quantisation (beyond-paper optimisation lever):
+    # int8 *storage* — halves weight bytes read/gathered at serve time
+    serve_weight_dtype: str = "bf16"   # "bf16" | "int8"
+
+
+# ---------------------------------------------------------------------------
+# Training config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    microbatch: int = 0                # 0 -> no accumulation
+    learning_rate: float = 3e-4
+    warmup_steps: int = 10
+    schedule: str = "cosine"           # cosine | wsd | constant
+    wsd_decay_frac: float = 0.1
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    seed: int = 0
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+
+
+def small_test_config(**kw) -> ModelConfig:
+    """A tiny config for CPU tests."""
+    base = dict(name="tiny", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, d_ff=128, vocab_size=256)
+    base.update(kw)
+    return ModelConfig(**base)

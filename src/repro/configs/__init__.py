@@ -1,0 +1,55 @@
+"""Architecture registry: the ten assigned architectures (+ the paper's
+own workloads).  ``get(name)`` returns the full published config;
+``get_reduced(name)`` returns a same-family miniature for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict
+
+from repro.config import ModelConfig
+
+_MODULES = [
+    "llava_next_mistral_7b",
+    "olmoe_1b_7b",
+    "granite_moe_1b_a400m",
+    "glm4_9b",
+    "command_r_plus_104b",
+    "qwen2_5_3b",
+    "minicpm_2b",
+    "jamba_v0_1_52b",
+    "xlstm_350m",
+    "whisper_tiny",
+]
+
+ARCH_NAMES = [m.replace("_", "-") for m in _MODULES]
+# canonical ids as assigned
+ARCH_IDS = {
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "glm4-9b": "glm4_9b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "minicpm-2b": "minicpm_2b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "xlstm-350m": "xlstm_350m",
+    "whisper-tiny": "whisper_tiny",
+}
+
+
+def _module(name: str):
+    mod = ARCH_IDS.get(name, name.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).config()
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _module(name).reduced()
+
+
+def all_arch_ids():
+    return list(ARCH_IDS.keys())

@@ -1,0 +1,16 @@
+"""command-r-plus-104b [dense]: 64L d_model=12288 96H (GQA kv=8)
+d_ff=33792 vocab=256000 — GQA, no-bias.  [hf:CohereForAI/c4ai-command-r]"""
+from repro.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-plus-104b", family="dense", num_layers=64,
+        d_model=12288, num_heads=96, num_kv_heads=8, d_ff=33792,
+        vocab_size=256000, rope_theta=75000000.0, qkv_bias=False,
+        activation="silu", use_rmsnorm=True, tie_embeddings=True)
+
+
+def reduced() -> ModelConfig:
+    return config().replace(num_layers=2, d_model=96, num_heads=6,
+                            num_kv_heads=2, d_ff=192, vocab_size=512)

@@ -1,0 +1,25 @@
+"""jamba-v0.1-52b [hybrid]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2 — Mamba+attn 1:7 interleave, MoE every other
+layer.  [arXiv:2403.19887]
+
+Sub-quadratic (Mamba-dominant) -> runs the long_500k decode shape: only
+the 4 attention layers keep a KV cache; Mamba layers carry O(1) state.
+"""
+from repro.config import MoEConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b", family="hybrid", num_layers=32, d_model=4096,
+        num_heads=32, num_kv_heads=8, d_ff=14336, vocab_size=65536,
+        attn_period=8,                     # 1 attention per 8 layers (1:7)
+        moe=MoEConfig(num_experts=16, top_k=2), moe_layer_period=2,
+        ssm_state_dim=16, ssm_conv_width=4, ssm_expand=2,
+        rope_theta=10000.0, activation="silu", use_rmsnorm=True)
+
+
+def reduced() -> ModelConfig:
+    return config().replace(num_layers=8, d_model=64, num_heads=4,
+                            num_kv_heads=2, d_ff=128, vocab_size=256,
+                            moe=MoEConfig(num_experts=4, top_k=2),
+                            ssm_state_dim=8)

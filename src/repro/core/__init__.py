@@ -1,0 +1,12 @@
+# The paper's primary contribution: the hybrid analog/digital PUM
+# execution model as composable JAX modules.
+#   bitslice   — bit-plane arithmetic (paper Fig. 2)
+#   analog     — ACE fidelity simulation (noise, ADC, compensation)
+#   digital    — DCE NOR-complete Boolean bit-plane ops (RACER/OSCAR)
+#   ibert      — integer-only nonlinearities (the DCE role for LLMs)
+#   pum_linear — PUMLinear: quantised linear layer (bf16 | int8 | pum)
+#   hct        — HCT/vACore allocator + Table-1 library calls
+#   isa        — hybrid ISA µop timing (arbiter/IIU/shift units)
+#   costmodel  — cycle/energy model of the five evaluated systems
+# NOTE: submodules import lazily to avoid import cycles; import them as
+# `from repro.core import bitslice` etc.

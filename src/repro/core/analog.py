@@ -1,0 +1,221 @@
+"""Analog Compute Element (ACE) functional simulation.
+
+Models the analog crossbar MVM path of DARTH-PUM (paper §2.2.1, §4):
+  * differential cell pairs (signed weights as G+ / G- arrays),
+  * per-array MVM over 64-row segments (each segment has its own bitline
+    readout — arrays are 64x64, so a K-dim reduction spans ceil(K/64)
+    physically separate arrays whose outputs are summed digitally),
+  * CrossSim-style non-idealities: programming noise (relative conductance
+    error), read noise, and an IR-drop proxy (measured current droops
+    quadratically with total bitline current),
+  * ADC quantisation (SAR / ramp; ramp supports early termination),
+  * the paper's parasitic compensation scheme (§4.3): {0,1} -> {-1/2,+1/2}
+    remap via differential pairs + post-MVM compensation factor applied in
+    the DCE.
+
+This is the *fidelity* path: pure jnp, exact when noise is disabled.
+The *performance* path (deployment) is ``kernels/bitslice_mvm``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ADCConfig, NoiseConfig
+from repro.core import bitslice
+
+ARRAY_ROWS = 64     # paper Table 2: ReRAM array size 64x64
+ARRAY_COLS = 64
+
+
+# ---------------------------------------------------------------------------
+# ADC models
+# ---------------------------------------------------------------------------
+
+def adc_quantize(v: jax.Array, adc: ADCConfig, full_scale: float) -> jax.Array:
+    """Quantise bitline value ``v`` to the ADC grid.
+
+    The grid has 2^bits levels over [0, full_scale]; with binary inputs and
+    integer conductances the ideal bitline value is an integer count, so an
+    LSB of 1 (full_scale = 2^bits - 1 >= max count) digitises exactly.
+    Ramp ADCs with ``early_levels`` only resolve the bottom levels —
+    correct whenever downstream maths needs only ``log2(early_levels)``
+    bits (paper §5.3/§7.3: AES MixColumns reads 2 bits before an XOR).
+    """
+    levels = (1 << adc.bits) - 1
+    # LSB covers an integer number of unit counts (bitline currents are
+    # integer multiples of one cell's unit conductance), so a sufficiently
+    # wide ADC digitises exactly; narrower ADCs quantise coarsely.
+    lsb = max(1.0, float(np.ceil(full_scale / levels)))
+    code = jnp.clip(jnp.round(v / lsb), 0, levels)
+    if adc.kind == "ramp" and adc.early_levels > 0:
+        # early termination: only the low `early_levels` codes are resolved;
+        # the value is read modulo that range (sufficient pre-XOR).
+        code = jnp.mod(code, adc.early_levels)
+    return code * lsb
+
+
+# ---------------------------------------------------------------------------
+# Noise injection
+# ---------------------------------------------------------------------------
+
+def _program_noise(planes: jax.Array, sigma: float, key: jax.Array,
+                   ) -> jax.Array:
+    """Relative conductance error at programming time (per device)."""
+    if sigma <= 0.0:
+        return planes.astype(jnp.float32)
+    noise = 1.0 + sigma * jax.random.normal(key, planes.shape)
+    return planes.astype(jnp.float32) * noise
+
+
+def _ir_drop(i_line: jax.Array, alpha: float) -> jax.Array:
+    """IR-drop proxy: droop grows with total line current (paper §4.3 /
+    Xiao+ parasitics): I_meas = I - alpha * I^2."""
+    if alpha <= 0.0:
+        return i_line
+    return i_line - alpha * i_line * i_line
+
+
+# ---------------------------------------------------------------------------
+# Crossbar MVM with full analog pipeline
+# ---------------------------------------------------------------------------
+
+def crossbar_mvm(x_q: jax.Array, w_q: jax.Array, *, weight_bits: int,
+                 bits_per_slice: int, input_bits: int,
+                 adc: ADCConfig, noise: NoiseConfig,
+                 key: Optional[jax.Array] = None,
+                 signed_inputs: bool = True) -> jax.Array:
+    """Full ACE simulation of ``y = x_q @ w_q`` (integer operands).
+
+    x_q: [..., K] int32; w_q: [K, N] int32 (signed).  Returns int32-valued
+    float (rounded) result; exact == x_q @ w_q when noise disabled and ADC
+    wide enough.
+
+    Pipeline (per paper Fig. 9): input bit-planes applied one per cycle to
+    the wordlines; each 64-row array segment produces a partial-product
+    vector per (input-bit, weight-slice, segment); ADC digitises each; the
+    shift units + DCE recombine (shift-and-add over input bits and slices,
+    plain adds over segments).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    K, N = w_q.shape
+    pos, neg = bitslice.split_differential(w_q)
+    mag_bits = weight_bits - 1
+    pos_planes = bitslice.slice_planes_unsigned(pos, mag_bits, bits_per_slice)
+    neg_planes = bitslice.slice_planes_unsigned(neg, mag_bits, bits_per_slice)
+    n_slices = pos_planes.shape[0]
+
+    kp, kn, kr = jax.random.split(key, 3)
+    pos_g = _program_noise(pos_planes, noise.prog_sigma if noise.enable else 0.0, kp)
+    neg_g = _program_noise(neg_planes, noise.prog_sigma if noise.enable else 0.0, kn)
+
+    x_planes, x_weights = bitslice.slice_bits_input(x_q, input_bits,
+                                                    signed=signed_inputs)
+    n_bits = x_planes.shape[0]
+
+    # segment the K dimension into 64-row arrays
+    n_seg = -(-K // ARRAY_ROWS)
+    pad = n_seg * ARRAY_ROWS - K
+    if pad:
+        pos_g = jnp.pad(pos_g, ((0, 0), (0, pad), (0, 0)))
+        neg_g = jnp.pad(neg_g, ((0, 0), (0, pad), (0, 0)))
+        x_planes = jnp.pad(x_planes, ((0, 0),) + ((0, 0),) * (x_planes.ndim - 2)
+                           + ((0, pad),))
+    pos_g = pos_g.reshape(n_slices, n_seg, ARRAY_ROWS, N)
+    neg_g = neg_g.reshape(n_slices, n_seg, ARRAY_ROWS, N)
+    xp = x_planes.reshape(x_planes.shape[:-1] + (n_seg, ARRAY_ROWS))
+    xp = jnp.moveaxis(xp, -2, 1)                 # [n_bits, n_seg, ..., 64]
+    xpf = xp.astype(jnp.float32)
+
+    # per-bitline full scale: binary inputs x (2^M - 1) conductance x 64 rows
+    cell_max = (1 << bits_per_slice) - 1
+    full_scale = float(ARRAY_ROWS * cell_max)
+    read_sigma = noise.read_sigma if noise.enable else 0.0
+    ir_alpha = noise.ir_alpha if noise.enable else 0.0
+
+    def line(xb, g, k2):
+        """One (input-bit, segment) MVM against one differential rail."""
+        i_line = jnp.einsum("...k,kn->...n", xb, g)
+        i_line = _ir_drop(i_line, ir_alpha)
+        if read_sigma > 0.0:
+            i_line = i_line + read_sigma * jax.random.normal(k2, i_line.shape)
+        return adc_quantize(i_line, adc, full_scale)
+
+    # accumulate over input bits, slices, segments with proper shift weights
+    out = jnp.zeros(x_q.shape[:-1] + (N,), jnp.float32)
+    keys = jax.random.split(kr, n_bits * n_slices * n_seg * 2)
+    ki = 0
+    for b in range(n_bits):
+        for s in range(n_slices):
+            for seg in range(n_seg):
+                p = line(xpf[b, seg], pos_g[s, seg], keys[ki]); ki += 1
+                n_ = line(xpf[b, seg], neg_g[s, seg], keys[ki]); ki += 1
+                w = float(x_weights[b]) * float(1 << (s * bits_per_slice))
+                out = out + w * (p - n_)
+    return jnp.round(out).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Parasitic compensation scheme (paper §4.3)
+# ---------------------------------------------------------------------------
+
+def compensated_binary_mvm(x_bits: jax.Array, w_bits: jax.Array, *,
+                           noise: NoiseConfig, adc: ADCConfig,
+                           key: Optional[jax.Array] = None) -> jax.Array:
+    """MVM of a strictly-positive binary matrix with the remapping scheme.
+
+    Naive mapping stores w in {0,1} on the positive rail only -> large
+    positive-rail current -> IR droop.  The paper remaps cell values
+    {0,1} -> {-1/2,+1/2} using the differential pair:
+        w' = w - 1/2   =>   x @ w' = x @ w - (1/2) * sum(x)
+    so the true result is recovered by adding the *compensation factor*
+    (1/2) * popcount(x) in the DCE after the ADC.  Halving the per-rail
+    current keeps the IR-drop error under one ADC LSB.
+
+    Returns int32 ``x_bits @ w_bits`` (exact under the modelled droop for
+    the paper's operating point).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    K, N = w_bits.shape
+    wf = w_bits.astype(jnp.float32)
+    xf = x_bits.astype(jnp.float32)
+    ir_alpha = noise.ir_alpha if noise.enable else 0.0
+    read_sigma = noise.read_sigma if noise.enable else 0.0
+    k1, k2 = jax.random.split(key)
+
+    # remapped rails: G+ holds w'>0 cells at 1/2 G_unit, G- holds w'<0 cells
+    # at 1/2 G_unit.  Physical line current = 0.5 * active-cell count; the
+    # ADC LSB aligns with the half-unit cell conductance, so we digitise
+    # 2*I_meas on an integer grid and halve the code.
+    i_pos = _ir_drop(0.5 * (xf @ wf), ir_alpha)
+    i_neg = _ir_drop(0.5 * (xf @ (1.0 - wf)), ir_alpha)
+    if read_sigma > 0.0:
+        i_pos = i_pos + read_sigma * jax.random.normal(k1, i_pos.shape)
+        i_neg = i_neg + read_sigma * jax.random.normal(k2, i_neg.shape)
+    full_scale = float(K)
+    v = 0.5 * (adc_quantize(2.0 * i_pos, adc, full_scale)
+               - adc_quantize(2.0 * i_neg, adc, full_scale))
+    comp = 0.5 * jnp.sum(xf, axis=-1, keepdims=True)     # DCE-applied factor
+    return jnp.round(v + comp).astype(jnp.int32)
+
+
+def naive_binary_mvm(x_bits: jax.Array, w_bits: jax.Array, *,
+                     noise: NoiseConfig, adc: ADCConfig,
+                     key: Optional[jax.Array] = None) -> jax.Array:
+    """The uncompensated mapping (w on the positive rail in {0,1}) — used by
+    tests/benchmarks to show the compensation scheme's benefit."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    K, N = w_bits.shape
+    xf = x_bits.astype(jnp.float32)
+    ir_alpha = noise.ir_alpha if noise.enable else 0.0
+    read_sigma = noise.read_sigma if noise.enable else 0.0
+    i_pos = _ir_drop(xf @ w_bits.astype(jnp.float32), ir_alpha)
+    if read_sigma > 0.0:
+        i_pos = i_pos + read_sigma * jax.random.normal(key, i_pos.shape)
+    return jnp.round(adc_quantize(i_pos, adc, float(K))).astype(jnp.int32)

@@ -1,0 +1,158 @@
+"""Bit-slicing: the arithmetic core of analog PUM (paper §2.2.1, Fig. 2).
+
+An N-bit matrix value is split into ``N/M`` slices of ``M`` bits (M = bits
+reliably stored per analog cell).  Each slice is programmed into a separate
+array; MVMs against each slice produce *partial products* that are
+recombined by shifting each by its slice's bit position and adding — the
+long-multiplication algorithm.  Input values are bit-sliced down to single
+bits (one DAC application per bit), producing one partial product per
+(input-bit, weight-slice) pair.
+
+Everything here is exact integer arithmetic (jnp, int32 accumulation) and
+serves as the oracle for the ``bitslice_mvm`` Pallas kernel.  The analog
+noise / ADC simulation wraps these primitives in ``repro.core.analog``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Quantisation
+# ---------------------------------------------------------------------------
+
+def quantize_symmetric(x: jax.Array, bits: int, axis=None,
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric linear quantisation to ``bits`` (one bit for sign).
+
+    Returns (q, scale) with ``q`` int32 in [-(2^(b-1)-1), 2^(b-1)-1] and
+    ``x ~= q * scale``.  ``axis``: reduction axis/axes for per-channel
+    scales (None = per-tensor).
+    """
+    qmax = (1 << (bits - 1)) - 1
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(absmax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Weight slicing (differential encoding: paper §2.2.1 "Handling Negative
+# Numbers" — we use differential cell pairs, so magnitudes are sliced and
+# the sign lives in which array of the pair holds the value)
+# ---------------------------------------------------------------------------
+
+def split_differential(q: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Signed int -> (positive array, negative array), both >= 0.
+
+    Models differential cell pairs: G+ holds max(q,0), G- holds max(-q,0);
+    the bitline computes I+ - I-.
+    """
+    return jnp.maximum(q, 0), jnp.maximum(-q, 0)
+
+
+def slice_planes_unsigned(w: jax.Array, total_bits: int,
+                          bits_per_slice: int) -> jax.Array:
+    """Split unsigned ints into bit-plane slices.
+
+    Returns ``[n_slices, *w.shape]`` int32, slice ``s`` holding bits
+    ``[s*M, (s+1)*M)`` (little-endian: slice 0 = least significant).
+    """
+    n_slices = -(-total_bits // bits_per_slice)
+    mask = (1 << bits_per_slice) - 1
+    planes = [(w >> (s * bits_per_slice)) & mask for s in range(n_slices)]
+    return jnp.stack(planes).astype(jnp.int32)
+
+
+def slice_planes_signed(q: jax.Array, weight_bits: int,
+                        bits_per_slice: int) -> jax.Array:
+    """Signed int -> combined differential planes.
+
+    Each plane is (pos_plane - neg_plane), i.e. the *net* conductance of the
+    differential pair for that slice; values lie in
+    [-(2^M - 1), 2^M - 1] and fit int8 for M <= 7.  This is the layout the
+    Pallas kernel consumes (pos/neg separated only matters for the noise
+    sim, which uses :func:`split_differential` + :func:`slice_planes_unsigned`).
+    """
+    pos, neg = split_differential(q)
+    mag_bits = weight_bits - 1                 # sign carried by the pair
+    p = slice_planes_unsigned(pos, mag_bits, bits_per_slice)
+    n = slice_planes_unsigned(neg, mag_bits, bits_per_slice)
+    return (p - n).astype(jnp.int32)
+
+
+def combine_planes(partials: jax.Array, bits_per_slice: int) -> jax.Array:
+    """Shift-and-add recombination over the leading (slice) axis.
+
+    ``partials``: [n_slices, ...] int32 partial products.  Returns
+    sum_s partials[s] << (s * M).  (Paper Fig. 2 post-processing; in
+    DARTH-PUM hardware, performed by shift units during ACE->DCE transfer
+    plus pipelined DCE adds.)
+    """
+    n_slices = partials.shape[0]
+    shifts = (jnp.arange(n_slices, dtype=jnp.int32) * bits_per_slice)
+    weights = (jnp.int32(1) << shifts).reshape(
+        (n_slices,) + (1,) * (partials.ndim - 1))
+    return jnp.sum(partials * weights, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Input bit-slicing (paper §2.2.1 "Bit-slicing can also be applied to input
+# values"; one bit applied per cycle through the DACs)
+# ---------------------------------------------------------------------------
+
+def slice_bits_input(x: jax.Array, bits: int, signed: bool = True,
+                     ) -> Tuple[jax.Array, np.ndarray]:
+    """Int input -> binary planes + per-plane signed weights.
+
+    Returns (planes [bits, *x.shape] in {0,1} int32, weights [bits]) such
+    that  x == sum_i weights[i] * planes[i].  For signed inputs the planes
+    are the two's-complement bits, top weight negative.
+    """
+    if signed:
+        offset = jnp.where(x < 0, jnp.int32(1) << bits, 0)
+        u = (x + offset).astype(jnp.int32)          # two's complement, `bits` wide
+    else:
+        u = x.astype(jnp.int32)
+    planes = jnp.stack([(u >> i) & 1 for i in range(bits)]).astype(jnp.int32)
+    weights = np.array([1 << i for i in range(bits)], dtype=np.int64)
+    if signed:
+        weights[bits - 1] = -weights[bits - 1]
+    return planes, weights
+
+
+# ---------------------------------------------------------------------------
+# Exact bit-sliced matmul (oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def bitsliced_matmul_exact(x_q: jax.Array, w_q: jax.Array, weight_bits: int,
+                           bits_per_slice: int) -> jax.Array:
+    """y = x_q @ w_q computed through bit-plane decomposition.
+
+    x_q: [..., K] int (already quantised), w_q: [K, N] int signed.
+    Exactly equals ``x_q @ w_q`` in int32 — the decomposition is lossless;
+    this function exists to mirror the kernel's dataflow.
+    """
+    planes = slice_planes_signed(w_q, weight_bits, bits_per_slice)  # [S,K,N]
+
+    def one_plane(p):
+        return jnp.matmul(x_q.astype(jnp.int32), p.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+
+    partials = jax.vmap(one_plane)(planes)                          # [S,...,N]
+    return combine_planes(partials, bits_per_slice)
+
+
+def pack_unpack_roundtrip(q: jax.Array, weight_bits: int,
+                          bits_per_slice: int) -> jax.Array:
+    """Recombine planes back to values (property-test helper)."""
+    planes = slice_planes_signed(q, weight_bits, bits_per_slice)
+    return combine_planes(planes, bits_per_slice)

@@ -1,0 +1,253 @@
+"""Digital Compute Element (DCE) functional simulation.
+
+Models RACER-style bit-pipelined Boolean PUM (paper §2.2.2) built on the
+OSCAR logic family, whose only primitive is NOR.  A *vector register* holds
+M elements of N bits, bit-striped across N arrays; we represent it as a
+bool plane stack ``[bits, rows]`` (plane 0 = LSB).
+
+Two layers:
+  * gate-accurate ops built **only from NOR** (plus copy), with a
+    `GateCounter` that tallies primitive issues — these feed/validate the
+    cost model and prove NOR-completeness of every operation we use;
+  * the same semantics exposed as fast vectorised jnp ops for bulk use
+    (AES at scale, integer ML post-processing).
+
+Implemented operations (everything DARTH-PUM's workloads need):
+  NOT/OR/AND/XOR, ripple-carry ADD/SUB, left/right shifts, pipeline
+  reversal (the paper's ShiftRows macro), element-wise load (gather by
+  address register — the paper's §4.2 new instruction, used by AES
+  SubBytes), compare, select, and multiply (shift-add).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Gate accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GateCounter:
+    """Counts primitive issues (one per NOR/copy across a whole vector —
+    digital PUM activates a full column per primitive, so the unit of cost
+    is one *vector-wide* primitive, matching RACER's model)."""
+    nor: int = 0
+    copy: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.nor + self.copy
+
+    def reset(self):
+        self.nor = 0
+        self.copy = 0
+
+
+_NULL = GateCounter()
+
+
+# ---------------------------------------------------------------------------
+# NOR-complete primitives on bool planes
+# ---------------------------------------------------------------------------
+
+def nor(a, b, ctr: GateCounter = _NULL):
+    ctr.nor += 1
+    return jnp.logical_not(jnp.logical_or(a, b))
+
+
+def not_(a, ctr: GateCounter = _NULL):
+    return nor(a, a, ctr)
+
+
+def or_(a, b, ctr: GateCounter = _NULL):
+    return not_(nor(a, b, ctr), ctr)
+
+
+def and_(a, b, ctr: GateCounter = _NULL):
+    return nor(not_(a, ctr), not_(b, ctr), ctr)
+
+
+def xnor_(a, b, ctr: GateCounter = _NULL):
+    # 4-gate NOR-only XNOR
+    n1 = nor(a, b, ctr)
+    n2 = nor(a, n1, ctr)            # = !a & b
+    n3 = nor(b, n1, ctr)            # =  a & !b
+    return nor(n2, n3, ctr)         # = !(a ^ b)
+
+
+def xor_(a, b, ctr: GateCounter = _NULL):
+    # minimal NOR-only XOR is 5 gates (XNOR + final inversion)
+    return not_(xnor_(a, b, ctr), ctr)
+
+
+def full_adder(a, b, cin, ctr: GateCounter = _NULL):
+    """1-bit full adder from NOR primitives. Returns (sum, carry)."""
+    axb = xor_(a, b, ctr)
+    s = xor_(axb, cin, ctr)
+    # carry = ab + cin(a^b)
+    t1 = and_(a, b, ctr)
+    t2 = and_(cin, axb, ctr)
+    c = or_(t1, t2, ctr)
+    return s, c
+
+
+# ---------------------------------------------------------------------------
+# Vector-register (bit-plane) representation
+# ---------------------------------------------------------------------------
+
+def pack(planes: jax.Array) -> jax.Array:
+    """[bits, ...] bool planes -> uint32 values (little-endian planes)."""
+    bits = planes.shape[0]
+    w = (jnp.uint32(1) << jnp.arange(bits, dtype=jnp.uint32)).reshape(
+        (bits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.uint32) * w, axis=0).astype(jnp.uint32)
+
+
+def unpack(v: jax.Array, bits: int) -> jax.Array:
+    """uint values -> [bits, ...] bool planes."""
+    v = v.astype(jnp.uint32)
+    return jnp.stack([((v >> i) & 1).astype(bool) for i in range(bits)])
+
+
+# ---------------------------------------------------------------------------
+# Multi-bit operations (bit-pipelined in hardware; plane-wise here)
+# ---------------------------------------------------------------------------
+
+def add(a: jax.Array, b: jax.Array, ctr: GateCounter = _NULL,
+        ) -> jax.Array:
+    """Ripple-carry add over plane stacks (modulo 2^bits)."""
+    bits = a.shape[0]
+    c = jnp.zeros_like(a[0])
+    out = []
+    for i in range(bits):
+        s, c = full_adder(a[i], b[i], c, ctr)
+        out.append(s)
+    return jnp.stack(out)
+
+
+def sub(a: jax.Array, b: jax.Array, ctr: GateCounter = _NULL) -> jax.Array:
+    """a - b via two's complement (invert + carry-in 1)."""
+    bits = a.shape[0]
+    nb = jnp.stack([not_(b[i], ctr) for i in range(bits)])
+    c = jnp.ones_like(a[0])
+    out = []
+    for i in range(bits):
+        s, c = full_adder(a[i], nb[i], c, ctr)
+        out.append(s)
+    return jnp.stack(out)
+
+
+def xor_planes(a: jax.Array, b: jax.Array, ctr: GateCounter = _NULL) -> jax.Array:
+    return jnp.stack([xor_(a[i], b[i], ctr) for i in range(a.shape[0])])
+
+
+def shift_left(a: jax.Array, n: int, ctr: GateCounter = _NULL) -> jax.Array:
+    """Logical shift toward MSB by n bit positions (plane relabel + zero
+    fill; in hardware: n pipeline shift steps)."""
+    ctr.copy += n
+    bits = a.shape[0]
+    zeros = jnp.zeros((n,) + a.shape[1:], dtype=a.dtype)
+    return jnp.concatenate([zeros, a[: bits - n]], axis=0)
+
+
+def shift_right(a: jax.Array, n: int, ctr: GateCounter = _NULL) -> jax.Array:
+    ctr.copy += n
+    zeros = jnp.zeros((n,) + a.shape[1:], dtype=a.dtype)
+    return jnp.concatenate([a[n:], zeros], axis=0)
+
+
+def reverse_pipeline(a: jax.Array, ctr: GateCounter = _NULL) -> jax.Array:
+    """The paper's pipeline-reversal macro (§5.3): drain + reverse
+    propagation. Cost modelled as a full drain (bits copies)."""
+    ctr.copy += a.shape[0]
+    return a[::-1]
+
+
+def rotate_rows(a: jax.Array, shift: int, axis: int = 1,
+                ctr: GateCounter = _NULL) -> jax.Array:
+    """Cyclic rotation of vector-register *rows* (AES ShiftRows uses
+    reversal + shifts; we model the macro's net effect)."""
+    ctr.copy += a.shape[0]
+    return jnp.roll(a, -shift, axis=axis)
+
+
+def elementwise_load(table: jax.Array, addr: jax.Array,
+                     ctr: GateCounter = _NULL) -> jax.Array:
+    """The paper's element-wise load (§4.2): for each row r, fetch
+    ``table[addr[r]]`` from an adjacent pipeline; 1 row read + 1 row write
+    per element per cycle in hardware.
+
+    table: [T, bits_out] uint-coded rows as planes [bits_out, T];
+    addr:  [bits_addr, rows] planes. Returns [bits_out, rows].
+    """
+    idx = pack(addr).astype(jnp.int32)                   # [rows]
+    ctr.copy += 2 * int(np.prod(idx.shape))              # read+write per elem
+    return table[:, idx]
+
+
+def mul(a: jax.Array, b: jax.Array, out_bits: int,
+        ctr: GateCounter = _NULL) -> jax.Array:
+    """Shift-add multiply (unsigned), truncated to out_bits."""
+    bits_a = a.shape[0]
+    acc = jnp.zeros((out_bits,) + a.shape[1:], dtype=a.dtype)
+    bx = jnp.concatenate([b, jnp.zeros((out_bits - b.shape[0],) + b.shape[1:],
+                                       b.dtype)], axis=0)[:out_bits]
+    for i in range(bits_a):
+        shifted = shift_left(bx, i, ctr) if i else bx
+        gated = jnp.stack([and_(shifted[j], a[i], ctr)
+                           for j in range(out_bits)])
+        acc = add(acc, gated, ctr)
+    return acc
+
+
+def greater_equal(a: jax.Array, b: jax.Array, ctr: GateCounter = _NULL,
+                  ) -> jax.Array:
+    """Unsigned a >= b, returns a single bool plane (via subtract borrow)."""
+    bits = a.shape[0]
+    nb = jnp.stack([not_(b[i], ctr) for i in range(bits)])
+    c = jnp.ones_like(a[0])
+    for i in range(bits):
+        _, c = full_adder(a[i], nb[i], c, ctr)
+    return c                                            # carry-out == no borrow
+
+
+def select(cond: jax.Array, a: jax.Array, b: jax.Array,
+           ctr: GateCounter = _NULL) -> jax.Array:
+    """cond ? a : b per row (cond: single plane)."""
+    out = []
+    for i in range(a.shape[0]):
+        t = and_(a[i], cond, ctr)
+        f = and_(b[i], not_(cond, ctr), ctr)
+        out.append(or_(t, f, ctr))
+    return jnp.stack(out)
+
+
+# ---------------------------------------------------------------------------
+# Primitive-count formulas (used by the cost model; validated against the
+# GateCounter in tests)
+# ---------------------------------------------------------------------------
+
+XOR_NORS = 5
+AND_NORS = 3
+OR_NORS = 2
+NOT_NORS = 1
+FULL_ADDER_NORS = 2 * XOR_NORS + 2 * AND_NORS + OR_NORS          # = 18
+
+
+def add_cost(bits: int) -> int:
+    return bits * FULL_ADDER_NORS
+
+
+def xor_cost(bits: int) -> int:
+    return bits * XOR_NORS
+
+
+def mul_cost(bits_a: int, out_bits: int) -> int:
+    return bits_a * (out_bits * AND_NORS + add_cost(out_bits)) + sum(
+        range(bits_a))  # + shifts (copies)

@@ -1,0 +1,174 @@
+"""Hybrid Compute Tile (HCT) / vACore allocation (paper §4, §4.4).
+
+Implements the paper's resource model and library surface:
+  * an HCT = 1 ACE (64 analog 64x64 arrays) + 1 DCE (64 pipelines x 64
+    arrays of 64x64) + shift/transpose/arbiter/IIU hardware;
+  * a **vACore** logically fuses ``n_slices x 2`` analog arrays (slices x
+    differential rails) so one logical matrix tile supports arbitrary
+    operand widths — only the shift constants programmed into the shift
+    units / IIU change (§4.2 "Expanding to Large-Width Operands");
+  * the application-agnostic library calls of Table 1 (allocVACore,
+    setMatrix, execMVM, updateRow/Col, disable{Analog,Digital}Mode),
+    binding allocation to the functional simulator and the cost model.
+
+This allocator is what the CNN/LLM mappers use to answer "how many HCTs
+does this model need, and what throughput follows" (per-layer distribution
+per §5.1), and what the iso-area benchmarks sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ADCConfig, NoiseConfig, PUMConfig
+from repro.core import analog, bitslice, isa
+
+ARRAY_DIM = 64
+ACE_ARRAYS_PER_HCT = 64
+DCE_PIPELINES_PER_HCT = 64
+DCE_ARRAYS_PER_PIPELINE = 64
+
+
+@dataclass
+class VACore:
+    """A virtual analog core: the arrays backing one logical matrix tile."""
+    hct: int
+    arrays: int                 # physical arrays fused (slices x 2 rails)
+    weight_bits: int
+    bits_per_slice: int
+
+    @property
+    def n_slices(self) -> int:
+        return max(1, -(-(self.weight_bits - 1) // self.bits_per_slice))
+
+
+@dataclass
+class MatrixHandle:
+    """Result of setMatrix(): where a logical matrix lives."""
+    shape: Tuple[int, int]
+    tiles_k: int
+    tiles_n: int
+    vacores: List[VACore]
+    hcts: List[int]
+    w_q: jax.Array              # quantised int weights (functional sim)
+    scale: jax.Array
+    analog_mode: bool = True
+
+
+@dataclass
+class DarthPUMDevice:
+    """A DARTH-PUM chip: a pool of HCTs + the library calls of Table 1."""
+    n_hcts: int = 1860                       # iso-area, SAR (paper §6)
+    adc: ADCConfig = field(default_factory=ADCConfig)
+    noise: NoiseConfig = field(default_factory=NoiseConfig)
+    _free_arrays: Dict[int, int] = field(default_factory=dict)
+    _matrices: List[MatrixHandle] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self._free_arrays:
+            self._free_arrays = {h: ACE_ARRAYS_PER_HCT
+                                 for h in range(self.n_hcts)}
+
+    # -- Table 1: application-agnostic calls --------------------------------
+
+    def allocVACore(self, element_size: int, bits_per_cell: int,
+                    ) -> VACore:
+        """Allocate one vACore (element_size-bit operands at bits_per_cell
+        per device) on the first HCT with room; configures shift units +
+        IIU (represented by the vACore's derived shift constants)."""
+        n_slices = max(1, -(-(element_size - 1) // bits_per_cell))
+        need = n_slices * 2                       # differential rails
+        for h, free in self._free_arrays.items():
+            if free >= need:
+                self._free_arrays[h] -= need
+                return VACore(h, need, element_size, bits_per_cell)
+        raise RuntimeError("out of analog arrays")
+
+    def setMatrix(self, w: jax.Array, element_size: int = 8,
+                  precision: int = 1) -> MatrixHandle:
+        """Store a matrix, allocating HCTs tile-by-tile.
+
+        ``precision`` maps to bits per cell per the paper's 0-2 scale:
+        0 -> 1 b/cell, 1 -> half the max, 2 -> max (4 b max per MILO-style
+        devices here).
+        """
+        bits_per_cell = {0: 1, 1: 2, 2: 4}[precision]
+        K, N = w.shape
+        tiles_k = -(-K // ARRAY_DIM)
+        tiles_n = -(-N // ARRAY_DIM)
+        w_q, scale = bitslice.quantize_symmetric(
+            jnp.asarray(w, jnp.float32), element_size)
+        cores = [self.allocVACore(element_size, bits_per_cell)
+                 for _ in range(tiles_k * tiles_n)]
+        handle = MatrixHandle((K, N), tiles_k, tiles_n, cores,
+                              sorted({c.hct for c in cores}), w_q, scale)
+        self._matrices.append(handle)
+        return handle
+
+    def execMVM(self, handle: MatrixHandle, x: jax.Array, *,
+                input_bits: int = 8,
+                key: Optional[jax.Array] = None) -> jax.Array:
+        """Execute MVM against a stored matrix through the ACE simulation
+        (or the DCE integer path if analog mode is disabled)."""
+        bpc = handle.vacores[0].bits_per_slice
+        wb = handle.vacores[0].weight_bits
+        x_q, xs = bitslice.quantize_symmetric(
+            jnp.asarray(x, jnp.float32), input_bits)
+        if handle.analog_mode:
+            acc = analog.crossbar_mvm(
+                x_q, handle.w_q, weight_bits=wb, bits_per_slice=bpc,
+                input_bits=input_bits, adc=self.adc, noise=self.noise,
+                key=key)
+        else:
+            acc = jnp.matmul(x_q, handle.w_q,
+                             preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * (xs * handle.scale)
+
+    def updateRow(self, handle: MatrixHandle, row: int, values: jax.Array):
+        q, _ = bitslice.quantize_symmetric(
+            jnp.asarray(values, jnp.float32) / handle.scale
+            * handle.scale, handle.vacores[0].weight_bits)
+        handle.w_q = handle.w_q.at[row, :].set(q)
+
+    def updateCol(self, handle: MatrixHandle, col: int, values: jax.Array):
+        q, _ = bitslice.quantize_symmetric(
+            jnp.asarray(values, jnp.float32), handle.vacores[0].weight_bits)
+        handle.w_q = handle.w_q.at[:, col].set(q)
+
+    def disableAnalogMode(self, handle: MatrixHandle):
+        """Copy matrix from analog to digital arrays; MVMs become exact
+        integer DCE computations (paper §7.5 high-accuracy migration)."""
+        handle.analog_mode = False
+
+    def disableDigitalMode(self, handle: MatrixHandle):
+        handle.analog_mode = True
+
+    # -- capacity / cost helpers --------------------------------------------
+
+    def mvm_cycles(self, handle: MatrixHandle, input_bits: int = 8,
+                   optimized: bool = True) -> int:
+        """Cycles for one MVM against this matrix: tiles along K are
+        sequential per output group (their partial sums reduce in the DCE),
+        tiles along N run on parallel vACores/HCTs."""
+        core = handle.vacores[0]
+        t = isa.schedule_mvm(input_bits, core.n_slices,
+                             adc_kind=self.adc.kind, optimized=optimized,
+                             early_levels=self.adc.early_levels)
+        return t.total * handle.tiles_k
+
+    def free_hcts(self) -> int:
+        return sum(1 for v in self._free_arrays.values()
+                   if v == ACE_ARRAYS_PER_HCT)
+
+
+def hcts_for_matrix(K: int, N: int, weight_bits: int,
+                    bits_per_cell: int) -> int:
+    """Static planning: HCTs needed to hold a KxN matrix (ceil arrays/64)."""
+    n_slices = max(1, -(-(weight_bits - 1) // bits_per_cell))
+    arrays = -(-K // ARRAY_DIM) * -(-N // ARRAY_DIM) * n_slices * 2
+    return -(-arrays // ACE_ARRAYS_PER_HCT)

@@ -1,0 +1,165 @@
+"""I-BERT integer-only kernels (Kim et al., ICML'21) — the DCE's auxiliary
+functions for the LLM-encoder workload (paper §5.2: "DARTH-PUM relies on
+its DCE to realize the non-MVM operations using I-BERT algorithms").
+
+All functions operate on *quantised tensors* ``(q, s)``: integer codes ``q``
+(int32) and a float scale ``s`` with real value ``q * s``.  Only integer
+ops appear on the q-path (adds, muls, shifts, comparisons) — exactly what a
+Boolean bit-pipelined DCE (or the TPU's integer VPU lanes) executes; scales
+fold into requantisation constants at compile time.
+
+Implemented: i_poly, i_erf, i_gelu, i_exp, i_softmax, i_sqrt, i_layernorm.
+Approximation-error bounds are asserted in tests/test_ibert.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    q: jax.Array          # int32 codes
+    s: jax.Array          # scalar (or broadcastable) float32 scale
+
+    @property
+    def real(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.s
+
+
+def quantize(x: jax.Array, bits: int = 8, axis=None) -> QTensor:
+    qmax = (1 << (bits - 1)) - 1
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    s = jnp.maximum(absmax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / s), -qmax, qmax).astype(jnp.int32)
+    return QTensor(q, s.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# i-Poly: integer 2nd-order polynomial  a(q*s + b)^2 + c
+# ---------------------------------------------------------------------------
+
+def i_poly(q: jax.Array, s: jax.Array, a: float, b: float, c: float,
+           ) -> Tuple[jax.Array, jax.Array]:
+    """Evaluate a(x+b)^2 + c on integer codes: all arithmetic on int32."""
+    qb = jnp.floor(b / s).astype(jnp.int32)
+    qc = jnp.floor(c / (a * s * s)).astype(jnp.int32)
+    qout = (q + qb) * (q + qb) + qc
+    sout = a * s * s
+    return qout, sout
+
+
+# ---------------------------------------------------------------------------
+# i-erf / i-GELU  (I-BERT §3.4)
+# ---------------------------------------------------------------------------
+
+_ERF_A, _ERF_B, _ERF_C = -0.2888, -1.769, 1.0
+
+
+def i_erf(q: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    sgn = jnp.sign(q)
+    qa = jnp.abs(q)
+    qa = jnp.minimum(qa, jnp.floor(-_ERF_B / s).astype(jnp.int32))
+    ql, sl = i_poly(qa, s, _ERF_A, _ERF_B, _ERF_C)
+    return sgn * ql, sl
+
+
+def i_gelu(q: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """GELU(x) = x * 0.5 * (1 + erf(x / sqrt(2))) with integer erf."""
+    qe, se = i_erf(q, s / jnp.sqrt(2.0).astype(jnp.float32))
+    one = jnp.floor(1.0 / se).astype(jnp.int32)
+    qout = q * (qe + one)
+    sout = s * se / 2.0
+    return qout, sout
+
+
+def gelu_quantized(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Float in, float out convenience wrapper (quantise -> i_gelu)."""
+    t = quantize(x, bits)
+    qo, so = i_gelu(t.q, t.s)
+    return (qo.astype(jnp.float32) * so).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# i-exp / i-softmax  (I-BERT §3.3)
+# ---------------------------------------------------------------------------
+
+_EXP_A, _EXP_B, _EXP_C = 0.3585, 1.353, 0.344
+_LN2 = 0.6931471805599453
+
+
+def i_exp(q: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """exp(x) for x <= 0 via range reduction x = -z ln2 + p, p in (-ln2, 0]."""
+    q_ln2 = jnp.floor(_LN2 / s).astype(jnp.int32)
+    q_ln2 = jnp.maximum(q_ln2, 1)
+    z = jnp.floor_divide(-q, q_ln2)                 # x<=0 -> z>=0
+    qp = q + z * q_ln2                              # p codes, in (-ln2, 0]
+    ql, sl = i_poly(qp, s, _EXP_A, _EXP_B, _EXP_C)
+    # exp(x) = 2^-z * poly(p); shift right by z (integer)
+    z = jnp.clip(z, 0, 30)
+    qout = jnp.right_shift(jnp.maximum(ql, 0), z)
+    return qout, sl
+
+
+def i_softmax(q: jax.Array, s: jax.Array, axis: int = -1,
+              out_bits: int = 15) -> Tuple[jax.Array, jax.Array]:
+    """Integer softmax: subtract max, i_exp, integer-divide by the sum."""
+    qm = jnp.max(q, axis=axis, keepdims=True)
+    qe, se = i_exp(q - qm, s)
+    tot = jnp.sum(qe, axis=axis, keepdims=True)
+    # out = qe / tot, expressed with an integer reciprocal at out_bits
+    factor = jnp.floor_divide((1 << out_bits), jnp.maximum(tot, 1))
+    qout = qe * factor
+    sout = 1.0 / (1 << out_bits)
+    return qout, jnp.asarray(sout, jnp.float32)
+
+
+def softmax_quantized(x: jax.Array, bits: int = 8, axis: int = -1) -> jax.Array:
+    t = quantize(x, bits, axis=None)
+    qo, so = i_softmax(t.q, t.s, axis=axis)
+    return (qo.astype(jnp.float32) * so).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# i-sqrt  (integer Newton iteration, I-BERT §3.5) and i-layernorm
+# ---------------------------------------------------------------------------
+
+def i_sqrt(n: jax.Array, iters: int = 6) -> jax.Array:
+    """floor(sqrt(n)) for non-negative int32 via Newton's method."""
+    n = jnp.maximum(n, 0)
+    # initial guess: 2^ceil(bits/2)
+    bits = 32 - jax.lax.clz(jnp.maximum(n, 1))
+    x = jnp.left_shift(jnp.int32(1), (bits + 1) // 2).astype(jnp.int32)
+
+    def body(_, x):
+        x_new = jnp.floor_divide(x + jnp.floor_divide(n, jnp.maximum(x, 1)), 2)
+        return jnp.where(x_new < x, x_new, x)
+
+    x = jax.lax.fori_loop(0, iters, body, x)
+    # final correction
+    x = jnp.where(x * x > n, x - 1, x)
+    return jnp.maximum(x, 0)
+
+
+def i_layernorm(q: jax.Array, s: jax.Array, axis: int = -1,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """LayerNorm on integer codes: (q - mean) / sqrt(var) with i_sqrt.
+
+    Output scale is 1/2^OUT for a fixed OUT-bit fraction.
+    """
+    OUT = 10
+    d = q.shape[axis]
+    mean = jnp.floor_divide(jnp.sum(q, axis=axis, keepdims=True), d)
+    dev = q - mean
+    var = jnp.sum(dev * dev, axis=axis, keepdims=True) // d
+    std = i_sqrt(var)
+    qout = jnp.floor_divide(dev * (1 << OUT), jnp.maximum(std, 1))
+    return qout, jnp.asarray(1.0 / (1 << OUT), jnp.float32)
+
+
+def layernorm_quantized(x: jax.Array, bits: int = 8, axis: int = -1,
+                        ) -> jax.Array:
+    t = quantize(x, bits)
+    qo, so = i_layernorm(t.q, t.s, axis=axis)
+    return (qo.astype(jnp.float32) * so).astype(x.dtype)

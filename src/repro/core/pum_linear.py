@@ -1,0 +1,123 @@
+"""PUMLinear — the paper's technique as a composable JAX module.
+
+Every linear layer in the framework routes through :func:`pum_linear`,
+which executes in one of three modes (``PUMConfig.mode``):
+
+  bf16  — plain dense matmul (float baseline).
+  int8  — TPU-native symmetric int8xint8->int32 quantised matmul; the
+          single-plane special case of bit-slicing.  Weights may be stored
+          pre-quantised (serving) or fake-quantised on the fly (QAT).
+  pum   — full bit-sliced execution: weights decomposed into
+          ``(weight_bits-1)/bits_per_slice`` differential planes
+          (the vACore abstraction, §4.2), per-plane integer matmuls
+          recombined by shift-and-add.  Routed through the Pallas kernel
+          (``use_kernel=True``) or its jnp oracle; with ``noise.enable``
+          the full ACE simulation (ADC + non-idealities) runs instead.
+
+Gradients: quantised modes use a straight-through estimator so QAT works
+out of the box (the forward sees quantised values, the backward sees
+identity) — training the model the ACE will eventually serve.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import PUMConfig
+from repro.core import analog, bitslice
+
+
+# ---------------------------------------------------------------------------
+# Straight-through fake-quant
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _ste(x: jax.Array, xq: jax.Array) -> jax.Array:
+    return xq
+
+
+def _ste_fwd(x, xq):
+    return xq, None
+
+
+def _ste_bwd(_, g):
+    return g, None
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    q, s = bitslice.quantize_symmetric(x, bits, axis=axis)
+    return _ste(x, (q.astype(jnp.float32) * s).astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Forward paths
+# ---------------------------------------------------------------------------
+
+def _matmul_bf16(x, w):
+    return jnp.matmul(x, w.astype(x.dtype))
+
+
+def _matmul_int8(x, w):
+    """Dynamic activation quant + weight quant, int32 accumulation."""
+    xq, xs = bitslice.quantize_symmetric(x.astype(jnp.float32), 8)
+    wq, ws = bitslice.quantize_symmetric(w.astype(jnp.float32), 8, axis=0)
+    acc = jax.lax.dot_general(
+        xq.astype(jnp.int8), wq.astype(jnp.int8),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * (xs * ws)
+    return y.astype(x.dtype)
+
+
+def _matmul_pum(x, w, cfg: PUMConfig, key: Optional[jax.Array]):
+    """Bit-sliced path. Exact (kernel/oracle) unless noise is enabled, in
+    which case the ACE fidelity sim (ADC + parasitics) runs."""
+    xq, xs = bitslice.quantize_symmetric(x.astype(jnp.float32), cfg.input_bits)
+    wq, ws = bitslice.quantize_symmetric(w.astype(jnp.float32),
+                                         cfg.weight_bits)
+    if cfg.noise.enable:
+        lead = xq.shape[:-1]
+        acc = analog.crossbar_mvm(
+            xq.reshape(-1, xq.shape[-1]), wq,
+            weight_bits=cfg.weight_bits, bits_per_slice=cfg.bits_per_slice,
+            input_bits=cfg.input_bits, adc=cfg.adc, noise=cfg.noise, key=key)
+        acc = acc.reshape(lead + (w.shape[-1],))
+    elif cfg.use_kernel:
+        from repro.kernels.bitslice_mvm import ops as bsops
+        acc = bsops.bitslice_mvm(xq, wq, weight_bits=cfg.weight_bits,
+                                 bits_per_slice=cfg.bits_per_slice)
+    else:
+        acc = bitslice.bitsliced_matmul_exact(
+            xq, wq, cfg.weight_bits, cfg.bits_per_slice)
+    y = acc.astype(jnp.float32) * (xs * ws)
+    return y.astype(x.dtype)
+
+
+def pum_linear(x: jax.Array, w: jax.Array, cfg: PUMConfig,
+               bias: Optional[jax.Array] = None,
+               key: Optional[jax.Array] = None) -> jax.Array:
+    """y = x @ w (+ bias) under the configured execution mode.
+
+    x: [..., K]; w: [K, N] float param. Differentiable in all modes (STE
+    for quantised forwards).
+    """
+    if cfg.mode == "bf16":
+        y = _matmul_bf16(x, w)
+    elif cfg.mode == "int8":
+        y_exact = _matmul_bf16(x, w)
+        y = _ste(y_exact, _matmul_int8(x, w))
+    elif cfg.mode == "pum":
+        y_exact = _matmul_bf16(x, w)
+        y = _ste(y_exact, _matmul_pum(x, w, cfg, key))
+    else:  # pragma: no cover
+        raise ValueError(cfg.mode)
+    if bias is not None:
+        # bias addition is a DCE (digital) op in the paper's mapping
+        y = y + bias.astype(y.dtype)
+    return y

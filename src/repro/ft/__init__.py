@@ -1,0 +1,2 @@
+from repro.ft.monitor import HeartbeatMonitor, StragglerDetector
+from repro.ft.preemption import PreemptionHandler

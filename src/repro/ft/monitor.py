@@ -1,0 +1,84 @@
+"""Straggler detection + heartbeat liveness.
+
+At 1000+ nodes the common failure modes are (a) a host silently slowing
+down (thermal, ECC retries, network) and (b) a host dying.  Both are
+detected from per-step timing reports:
+
+  * ``StragglerDetector`` keeps a rolling window of per-host step times
+    and flags hosts whose median exceeds ``threshold`` x the fleet median
+    — the orchestration layer then drains/replaces them (here: reported in
+    trainer metrics; tests inject synthetic timings).
+  * ``HeartbeatMonitor`` is file-based (shared FS): each host touches its
+    heartbeat every step; hosts silent for ``timeout_s`` are declared dead
+    so the job can restart on the surviving set (elastic restart via the
+    mesh-independent checkpoints).
+"""
+from __future__ import annotations
+
+import collections
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+
+class StragglerDetector:
+    def __init__(self, n_hosts: int, window: int = 16,
+                 threshold: float = 1.5):
+        self.n_hosts = n_hosts
+        self.window = window
+        self.threshold = threshold
+        self._times: List[collections.deque] = [
+            collections.deque(maxlen=window) for _ in range(n_hosts)]
+
+    def report(self, host: int, step_time_s: float):
+        self._times[host].append(step_time_s)
+
+    def _median(self, xs: Sequence[float]) -> float:
+        s = sorted(xs)
+        return s[len(s) // 2]
+
+    def stragglers(self) -> List[int]:
+        meds = [self._median(t) if t else 0.0 for t in self._times]
+        live = [m for m in meds if m > 0]
+        if not live:
+            return []
+        fleet = self._median(live)
+        return [h for h, m in enumerate(meds)
+                if m > self.threshold * fleet]
+
+    def slowdown(self, host: int) -> float:
+        meds = [self._median(t) if t else 0.0 for t in self._times]
+        live = [m for m in meds if m > 0]
+        if not live or not self._times[host]:
+            return 1.0
+        return self._median(self._times[host]) / self._median(live)
+
+
+class HeartbeatMonitor:
+    def __init__(self, directory: str, host_id: int = 0,
+                 timeout_s: float = 60.0):
+        self.directory = directory
+        self.host_id = host_id
+        self.timeout_s = timeout_s
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, host: int) -> str:
+        return os.path.join(self.directory, f"host_{host}.hb")
+
+    def beat(self, now: Optional[float] = None):
+        with open(self._path(self.host_id), "w") as f:
+            f.write(str(now if now is not None else time.time()))
+
+    def dead_hosts(self, known_hosts: Sequence[int],
+                   now: Optional[float] = None) -> List[int]:
+        now = now if now is not None else time.time()
+        dead = []
+        for h in known_hosts:
+            try:
+                with open(self._path(h)) as f:
+                    last = float(f.read().strip())
+                if now - last > self.timeout_s:
+                    dead.append(h)
+            except (FileNotFoundError, ValueError):
+                dead.append(h)
+        return dead

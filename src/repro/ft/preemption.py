@@ -1,0 +1,41 @@
+"""Preemption handling: SIGTERM/SIGINT -> checkpoint-and-exit.
+
+On TPU pods, maintenance events deliver SIGTERM with a grace window; the
+trainer polls ``should_stop`` each step and performs a synchronous save.
+"""
+from __future__ import annotations
+
+import signal
+import threading
+from typing import Optional
+
+
+class PreemptionHandler:
+    def __init__(self, install: bool = True):
+        self._stop = threading.Event()
+        self._prev = {}
+        if install:
+            self.install()
+
+    def install(self):
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                self._prev[sig] = signal.signal(sig, self._on_signal)
+            except ValueError:      # non-main thread (tests)
+                pass
+
+    def _on_signal(self, signum, frame):
+        self._stop.set()
+
+    def request_stop(self):
+        """Programmatic trigger (tests / external orchestrators)."""
+        self._stop.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._stop.is_set()
+
+    def uninstall(self):
+        for sig, prev in self._prev.items():
+            signal.signal(sig, prev)
+        self._prev.clear()

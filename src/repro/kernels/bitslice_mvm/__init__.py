@@ -1,0 +1,5 @@
+from repro.kernels.bitslice_mvm.ops import bitslice_mvm
+from repro.kernels.bitslice_mvm.ref import (bitslice_mvm_from_weights_ref,
+                                            bitslice_mvm_ref)
+
+__all__ = ["bitslice_mvm", "bitslice_mvm_ref", "bitslice_mvm_from_weights_ref"]

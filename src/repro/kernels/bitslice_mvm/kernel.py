@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: bit-sliced integer MVM with fused shift-and-add.
+
+This is the TPU-native realisation of the DARTH-PUM ACE + shift-unit
+pipeline (paper §4.1).  The analog crossbar's role (many small integer
+MACs) maps onto the MXU; the paper's key optimisation — recombining
+bit-sliced partial products *during* the data transfer instead of as a
+separate write/shift/add phase — maps to fusing the shift-and-add into the
+matmul epilogue so per-plane partial products never round-trip to HBM.
+
+Computes  out[M,N] (int32) = sum_s (x[M,K] @ w_planes[s,K,N]) << (M_BITS*s)
+
+with x int8 (quantised activations) and w_planes int8 (differential
+bit-planes of the quantised weights, values in [-(2^m-1), 2^m-1]).
+
+Tiling: grid (M/bm, N/bn, K/bk); the K axis is the innermost (arbitrary)
+dimension accumulating into a VMEM scratch accumulator; all S planes are
+processed per K-step so the recombination happens while the X/W tiles are
+resident in VMEM.  MXU-aligned tiles (multiples of 128 on the contracted
+and lane dimensions).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bitslice_mvm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_slices: int,
+                         bits_per_slice: int, k_steps: int):
+    """One (i, j, k) grid step.
+
+    x_ref: [bm, bk] int8      — activation tile
+    w_ref: [S, bk, bn] int8   — all weight planes for this (k, j) tile
+    o_ref: [bm, bn] int32     — output tile (written at the last k step)
+    acc_ref: [bm, bn] int32   — VMEM accumulator scratch
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    acc = acc_ref[...]
+    # shift-and-add recombination fused into the contraction epilogue:
+    # each plane's partial product is shifted by its bit position and
+    # accumulated immediately (never materialised in HBM).
+    for s in range(n_slices):
+        part = jax.lax.dot_general(
+            x, w_ref[s],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc = acc + (part << (s * bits_per_slice))
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def bitslice_mvm_pallas(x: jax.Array, w_planes: jax.Array, *,
+                        bits_per_slice: int,
+                        block_m: int = 128, block_n: int = 128,
+                        block_k: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """x: [M, K] int8; w_planes: [S, K, N] int8 -> [M, N] int32.
+
+    M, K, N must be multiples of the block sizes (ops.py pads).
+    ``interpret=True`` runs the kernel body on CPU for validation; on a
+    real TPU pass ``interpret=False``.
+    """
+    s, k, n = w_planes.shape
+    m = x.shape[0]
+    assert x.shape[1] == k
+    assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0, (
+        (m, k, n, block_m, block_k, block_n))
+    k_steps = k // block_k
+    grid = (m // block_m, n // block_n, k_steps)
+
+    kernel = functools.partial(_bitslice_mvm_kernel, n_slices=s,
+                               bits_per_slice=bits_per_slice,
+                               k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((s, block_k, block_n), lambda i, j, kk: (0, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w_planes)

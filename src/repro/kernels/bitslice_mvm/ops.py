@@ -1,0 +1,59 @@
+"""Jitted public wrapper for the bitslice_mvm Pallas kernel.
+
+Handles: leading batch dims, padding to MXU-aligned tiles, plane
+decomposition from signed quantised weights, and the interpret-mode switch
+(CPU validation vs. TPU execution).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitslice
+from repro.kernels.bitslice_mvm.kernel import bitslice_mvm_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("weight_bits", "bits_per_slice",
+                                             "block_m", "block_n", "block_k",
+                                             "interpret"))
+def bitslice_mvm(x_q: jax.Array, w_q: jax.Array, *, weight_bits: int = 8,
+                 bits_per_slice: int = 2, block_m: int = 128,
+                 block_n: int = 128, block_k: int = 128,
+                 interpret: bool | None = None) -> jax.Array:
+    """y = x_q @ w_q via the bit-sliced kernel.
+
+    x_q: [..., K] int (int8-range); w_q: [K, N] int signed (weight_bits).
+    Returns [..., N] int32.
+    """
+    if interpret is None:
+        interpret = _INTERPRET
+    lead = x_q.shape[:-1]
+    k, n = w_q.shape
+    x2 = x_q.reshape(-1, k).astype(jnp.int8)
+    m = x2.shape[0]
+
+    planes = bitslice.slice_planes_signed(w_q, weight_bits,
+                                          bits_per_slice).astype(jnp.int8)
+
+    bm = min(block_m, max(8, 1 << (m - 1).bit_length())) if m else block_m
+    x2 = _pad_to(_pad_to(x2, 0, block_m), 1, block_k)
+    planes = _pad_to(_pad_to(planes, 1, block_k), 2, block_n)
+
+    out = bitslice_mvm_pallas(x2, planes, bits_per_slice=bits_per_slice,
+                              block_m=block_m, block_n=block_n,
+                              block_k=block_k, interpret=interpret)
+    return out[:m, :n].reshape(lead + (n,))

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the bitslice_mvm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitslice
+
+
+def bitslice_mvm_ref(x: jax.Array, w_planes: jax.Array, *,
+                     bits_per_slice: int) -> jax.Array:
+    """x: [M, K] int; w_planes: [S, K, N] int -> [M, N] int32.
+
+    Reference dataflow: per-plane int32 matmul, shift-and-add recombine.
+    """
+    def one(p):
+        return jnp.matmul(x.astype(jnp.int32), p.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+
+    partials = jax.vmap(one)(w_planes)
+    return bitslice.combine_planes(partials, bits_per_slice)
+
+
+def bitslice_mvm_from_weights_ref(x_q: jax.Array, w_q: jax.Array, *,
+                                  weight_bits: int,
+                                  bits_per_slice: int) -> jax.Array:
+    """End-to-end oracle from signed quantised weights (== x_q @ w_q)."""
+    return bitslice.bitsliced_matmul_exact(x_q, w_q, weight_bits,
+                                           bits_per_slice)

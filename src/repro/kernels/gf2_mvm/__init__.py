@@ -1,0 +1,4 @@
+from repro.kernels.gf2_mvm.ops import gf2_mvm
+from repro.kernels.gf2_mvm.ref import gf2_mvm_ref
+
+__all__ = ["gf2_mvm", "gf2_mvm_ref"]

@@ -1,0 +1,42 @@
+"""Jitted public wrapper for the gf2_mvm Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gf2_mvm.kernel import gf2_mvm_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def gf2_mvm(x: jax.Array, a: jax.Array, *, block_m: int = 128,
+            block_n: int = 128, block_k: int = 128,
+            interpret: bool | None = None) -> jax.Array:
+    """Parity matmul y = (x @ a) & 1 for binary matrices.
+
+    x: [..., K] {0,1}; a: [K, N] {0,1}. Returns [..., N] int8 {0,1}.
+    """
+    if interpret is None:
+        interpret = _INTERPRET
+    lead = x.shape[:-1]
+    k, n = a.shape
+    x2 = x.reshape(-1, k).astype(jnp.int8)
+    m = x2.shape[0]
+    x2 = _pad_to(_pad_to(x2, 0, block_m), 1, block_k)
+    a2 = _pad_to(_pad_to(a.astype(jnp.int8), 0, block_k), 1, block_n)
+    out = gf2_mvm_pallas(x2, a2, block_m=block_m, block_n=block_n,
+                         block_k=block_k, interpret=interpret)
+    return out[:m, :n].reshape(lead + (n,))

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the gf2_mvm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gf2_mvm_ref(x: jax.Array, a: jax.Array) -> jax.Array:
+    """(x @ a) mod 2 with int32 accumulation; x, a in {0,1}."""
+    acc = jnp.matmul(x.astype(jnp.int32), a.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    return (acc & 1).astype(jnp.int8)

@@ -1,0 +1,94 @@
+"""Aggregate dry-run cell JSONs into the roofline table.
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), emits
+  results/roofline.csv            one row per (arch, shape, mesh, tag)
+  results/roofline.md             markdown for EXPERIMENTS.md §Roofline
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline_table
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results")
+
+
+def load_cells(dry_dir: str):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def one_liner(c) -> str:
+    """The required per-cell sentence: what moves the dominant term."""
+    dom = c.get("dominant")
+    if dom == "compute":
+        return ("compute-bound: more useful-flops fraction (less remat "
+                "recompute) or lower-precision matmuls move it")
+    if dom == "memory":
+        return ("HBM-bound: int8 weights / better fusion / larger "
+                "arithmetic-intensity tiles move it")
+    return ("collective-bound: resharding elimination, gradient "
+            "compression, or comm/compute overlap move it")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-dir", default=os.path.join(RESULTS_DIR, "dryrun"))
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--tag", default="base")
+    args = ap.parse_args()
+
+    cells = load_cells(args.dry_dir)
+    os.makedirs(args.out, exist_ok=True)
+
+    hdr = ("arch,shape,mesh,tag,status,compute_s,memory_s,collective_s,"
+           "dominant,useful_flops_frac,roofline_frac,peak_mem_GiB,"
+           "compile_s")
+    lines = [hdr]
+    md = ["| arch | shape | mesh | dom | compute_s | memory_s | coll_s | "
+          "useful | roofline | mem GiB |",
+          "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("status") == "ok":
+            lines.append(
+                f"{c['arch']},{c['shape']},{c['mesh']},{c['tag']},ok,"
+                f"{c['compute_s']:.4e},{c['memory_s']:.4e},"
+                f"{c['collective_s']:.4e},{c['dominant']},"
+                f"{c['useful_flops_frac']:.3f},{c['roofline_frac']:.4f},"
+                f"{c['peak_mem_gib']:.2f},{c.get('compile_s', 0)}")
+            if c["mesh"] == "16x16" and c["tag"] == args.tag:
+                md.append(
+                    f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                    f"{c['dominant']} | {c['compute_s']:.3e} | "
+                    f"{c['memory_s']:.3e} | {c['collective_s']:.3e} | "
+                    f"{c['useful_flops_frac']:.2f} | "
+                    f"{c['roofline_frac']:.3f} | "
+                    f"{c['peak_mem_gib']:.1f} |")
+        else:
+            note = c.get("reason") or c.get("error", "")
+            lines.append(f"{c['arch']},{c['shape']},{c['mesh']},"
+                         f"{c['tag']},{c['status']},,,,,,,,\"{note}\"")
+            if c["mesh"] == "16x16":
+                md.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                          f"{c['status']}: {note[:60]} | | | | | | |")
+
+    with open(os.path.join(args.out, "roofline.csv"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with open(os.path.join(args.out, "roofline.md"), "w") as f:
+        f.write("\n".join(md) + "\n")
+    print("\n".join(lines))
+    ok = sum(1 for c in cells if c.get("status") == "ok")
+    sk = sum(1 for c in cells if c.get("status") == "skipped")
+    er = sum(1 for c in cells if c.get("status") == "error")
+    print(f"# cells: {ok} ok, {sk} skipped, {er} error")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# Model zoo: the paper's application models (resnet20, encoder) plus the
+# ten assigned LM-family architectures (dense / MoE / hybrid / SSM /
+# enc-dec / VLM), all built on repro.core.pum_linear.

@@ -1,0 +1,216 @@
+"""GQA attention with KV cache, RoPE, optional biases, cross-attention,
+and a chunked (online-softmax) path for long prefill.
+
+The attention score/value matmuls are *dynamic* products: per the paper's
+§5.2 mapping they never route through the PUM path — only the Q/K/V/O
+projections (static weights) do.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import ibert
+from repro.dist.sharding import shard_act
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+CHUNK_Q = 1024          # online-softmax query block
+CHUNK_K = 1024          # online-softmax key block
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": layers.linear_init(kq, d, cfg.num_heads * hd, cfg.qkv_bias),
+        "wk": layers.linear_init(kk, d, cfg.num_kv_heads * hd, cfg.qkv_bias),
+        "wv": layers.linear_init(kv, d, cfg.num_kv_heads * hd, cfg.qkv_bias),
+        "wo": layers.linear_init(ko, cfg.num_heads * hd, d),
+    }
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Params:
+    hd = cfg.resolved_head_dim
+    sds = jax.ShapeDtypeStruct
+    return {"k": sds((batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "v": sds((batch, max_len, cfg.num_kv_heads, hd), dtype)}
+
+
+def _softmax(scores: jax.Array, softcap: float) -> jax.Array:
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m))
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _plain_attention(q, k, v, mask, softcap, ibert_mode=False):
+    """q: [B,S,KV,G,hd]; k/v: [B,T,KV,hd]; mask: [S,T]."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = jnp.einsum("bskgd,btkd->bksgt", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask[None, None, :, None, :], scores, NEG_INF)
+    if ibert_mode:
+        probs = ibert.softmax_quantized(scores.astype(jnp.float32), bits=8,
+                                        axis=-1)
+    else:
+        probs = _softmax(scores, softcap)
+    out = jnp.einsum("bksgt,btkd->bskgd", probs.astype(v.dtype), v)
+    return out
+
+
+def _chunked_attention(q, k, v, q_offset, softcap):
+    """Online-softmax attention: O(S*T) compute with O(chunk) score memory.
+
+    q: [B,S,KV,G,hd] (queries at absolute positions q_offset + [0, S));
+    k/v: [B,T,KV,hd]. Causal. Returns [B,S,KV,G,hd].
+    """
+    b, s, kvh, g, hd = q.shape
+    t = k.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    nq = -(-s // CHUNK_Q)
+    nk = -(-t // CHUNK_K)
+    pad_q = nq * CHUNK_Q - s
+    pad_k = nk * CHUNK_K - t
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qc = q.reshape(b, nq, CHUNK_Q, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nk, CHUNK_K, kvh, hd)
+    vc = v.reshape(b, nk, CHUNK_K, kvh, hd)
+
+    q_pos_base = jnp.arange(CHUNK_Q)
+    k_pos_base = jnp.arange(CHUNK_K)
+
+    def per_q_chunk(qi, qblk):
+        # qblk: [B, CQ, KV, G, hd]
+        m0 = jnp.full((b, kvh, g, CHUNK_Q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, CHUNK_Q), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, CHUNK_Q, hd), jnp.float32)
+
+        def body(carry, ki):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(kc, ki, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vc, ki, 1, keepdims=False)
+            sc = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk,
+                            preferred_element_type=jnp.float32) * scale
+            if softcap > 0:
+                sc = jnp.tanh(sc / softcap) * softcap
+            qpos = q_offset + qi * CHUNK_Q + q_pos_base
+            kpos = ki * CHUNK_K + k_pos_base
+            causal = qpos[:, None] >= kpos[None, :]
+            valid = kpos[None, :] < t
+            sc = jnp.where((causal & valid)[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)          # [B, CQ, KV, G, hd]
+
+    outs = jax.lax.map(lambda args: per_q_chunk(args[0], args[1]),
+                       (jnp.arange(nq), qc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * CHUNK_Q, kvh, g,
+                                                   hd)
+    return out[:, :s]
+
+
+def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array,
+              cache: Optional[Params] = None,
+              cache_index: Optional[jax.Array] = None,
+              cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              use_rope: bool = True,
+              ) -> Tuple[jax.Array, Optional[Params]]:
+    """x: [B, S, D].  Modes:
+      * train/prefill (cache None, cross_kv None): causal self-attention;
+        chunked online-softmax when S > 2*CHUNK_Q.
+      * decode (cache set): writes K/V at cache_index, attends over cache.
+      * cross attention (cross_kv set): encoder-decoder attention.
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    kvh = cfg.num_kv_heads
+    g = cfg.num_heads // kvh
+    pum = cfg.pum
+
+    q = layers.linear(p["wq"], x, pum).reshape(b, s, kvh, g, hd)
+    if cross_kv is None:
+        k = layers.linear(p["wk"], x, pum).reshape(b, s, kvh, hd)
+        v = layers.linear(p["wv"], x, pum).reshape(b, s, kvh, hd)
+        if use_rope:
+            cos, sin = layers.rope_tables(positions, hd, cfg.rope_theta)
+            q = apply_rope_gqa(q, cos, sin)
+            k = layers.apply_rope(k, cos, sin)
+    else:
+        k, v = cross_kv
+
+    if cache is not None and cross_kv is None:
+        # decode/prefill-into-cache: write the new K/V at cache_index
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        cache = {"k": k_cache, "v": v_cache}
+        t = k_cache.shape[1]
+        if s > 2 * CHUNK_Q:
+            # long prefill into a cache: chunked online softmax
+            out = _chunked_attention(q, k_cache, v_cache, cache_index,
+                                     cfg.attn_logit_softcap)
+        else:
+            kpos = jnp.arange(t)
+            mask = (kpos[None, :] <= cache_index + jnp.arange(s)[:, None])
+            out = _plain_attention(q, k_cache, v_cache, mask,
+                                   cfg.attn_logit_softcap,
+                                   ibert_mode=pum.ibert)
+    elif cross_kv is not None:
+        t = k.shape[1]
+        mask = jnp.ones((s, t), bool)
+        out = _plain_attention(q, k, v, mask, cfg.attn_logit_softcap,
+                               ibert_mode=pum.ibert)
+    else:
+        if s > 2 * CHUNK_Q:
+            out = _chunked_attention(q, k, v, 0, cfg.attn_logit_softcap)
+        else:
+            mask = jnp.tril(jnp.ones((s, s), bool))
+            out = _plain_attention(q, k, v, mask, cfg.attn_logit_softcap,
+                                   ibert_mode=pum.ibert)
+
+    out = out.astype(x.dtype).reshape(b, s, cfg.num_heads * hd)
+    out = shard_act(out, "data", None, "model")
+    return layers.linear(p["wo"], out, pum), cache
+
+
+def apply_rope_gqa(q: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """q: [B, S, KV, G, hd]."""
+    b, s, kvh, g, hd = q.shape
+    q2 = q.reshape(b, s, kvh * g, hd)
+    q2 = layers.apply_rope(q2, cos, sin)
+    return q2.reshape(b, s, kvh, g, hd)

@@ -1,0 +1,102 @@
+"""Shared layers: norms, RoPE, linear (PUM-routed), embeddings."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, PUMConfig
+from repro.core.pum_linear import pum_linear
+
+Params = Dict[str, Any]
+
+
+def linear_init(key, d_in: int, d_out: int, bias: bool = False,
+                scale: Optional[float] = None, dtype=jnp.float32) -> Params:
+    scale = 1.0 / np.sqrt(d_in) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array, pum: PUMConfig) -> jax.Array:
+    return pum_linear(x, p["w"], pum, bias=p.get("b"))
+
+
+def norm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"] + p.get("bias", 0.0)).astype(x.dtype)
+
+
+def norm_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.use_rmsnorm:
+        return rmsnorm(p, x, cfg.norm_eps)
+    return layernorm(p, x, cfg.norm_eps)
+
+
+def make_norm(cfg: ModelConfig) -> Params:
+    return norm_init(cfg.d_model) if cfg.use_rmsnorm \
+        else layernorm_init(cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """positions: [...,] int -> (cos, sin) of shape [..., head_dim/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., S, H, hd]; cos/sin: [..., S, hd/2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+                           ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def padded_vocab(vocab: int, mult: int = 256) -> int:
+    return -(-vocab // mult) * mult
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (padded_vocab(vocab), d), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]

@@ -1,0 +1,47 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and plain GELU (whisper).
+
+FFN weights are the paper's canonical ACE residents (§5.2: "executing the
+feed-forward network using the ACE"): they route through PUMLinear, and
+the activation function runs on the DCE path (I-BERT integer GELU when
+``pum.ibert``)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import ibert
+from repro.dist.sharding import shard_act
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.activation == "silu":           # gated
+        return {"wg": layers.linear_init(k1, d, f),
+                "wu": layers.linear_init(k2, d, f),
+                "wd": layers.linear_init(k3, f, d)}
+    return {"wu": layers.linear_init(k1, d, f, bias=True),
+            "wd": layers.linear_init(k2, f, d, bias=True)}
+
+
+def mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    pum = cfg.pum
+    if "wg" in p:
+        gate = layers.linear(p["wg"], x, pum)
+        up = layers.linear(p["wu"], x, pum)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = layers.linear(p["wu"], x, pum)
+        if pum.ibert:
+            h = ibert.gelu_quantized(h.astype(jnp.float32), 8).astype(h.dtype)
+        else:
+            h = jax.nn.gelu(h, approximate=True)
+    h = shard_act(h, "data", None, "model")
+    return layers.linear(p["wd"], h, pum)

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts with top-k routing and capacity-bounded sort-based
+dispatch (expert-parallel over the ``model`` mesh axis).
+
+Dispatch strategy (TPU-friendly, no ragged ops):
+  1. router logits -> top-k experts per token;
+  2. flatten (token, k) assignments, sort by expert id;
+  3. each assignment's slot within its expert = its rank among that
+     expert's assignments (computed from the sorted order with cumsum —
+     O(TK log TK), no [T, E, C] one-hot blow-up);
+  4. scatter into per-expert buffers [E, C, D] (assignments past the
+     capacity C are dropped — standard TPU MoE);
+  5. batched expert FFN via einsum (experts sharded over ``model`` = EP;
+     resharding token->expert layout is XLA's all-to-all);
+  6. scatter back with router weights.
+
+Aux losses: load-balancing (Switch-style) + router z-loss, returned for
+the trainer to add.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.dist.sharding import shard_act
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+# hillclimb knob: group-local dispatch (sort within per-sequence groups —
+# no global cross-device argsort; set via set_grouped_dispatch)
+_GROUPED = False
+
+
+def set_grouped_dispatch(enabled: bool):
+    global _GROUPED
+    _GROUPED = enabled
+
+
+def grouped_dispatch_enabled() -> bool:
+    return _GROUPED
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    f = cfg.d_ff
+    e = cfg.moe.num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "router": layers.linear_init(kr, d, e, scale=0.02),
+        "experts_wg": jax.random.normal(kg, (e, d, f)) * s,
+        "experts_wu": jax.random.normal(ku, (e, d, f)) * s,
+        "experts_wd": jax.random.normal(kd, (e, f, d)) * (1.0 / np.sqrt(f)),
+    }
+
+
+def _dispatch_ffn(p: Params, xf: jax.Array, gate_vals, gate_idx,
+                  cfg: ModelConfig, cap: int,
+                  constrain: bool = True) -> jax.Array:
+    """Sort-based capacity dispatch for one token group.
+
+    xf: [T, D]; gate_vals/idx: [T, k].  Returns [T, D].
+    """
+    t, d = xf.shape
+    e = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    flat_expert = gate_idx.reshape(-1)                       # [T*k]
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    # rank within expert: position in sorted order minus start of segment
+    seg_start = jnp.searchsorted(sorted_expert, jnp.arange(e), side="left")
+    slot_sorted = jnp.arange(t * k) - seg_start[sorted_expert]
+    slot = jnp.zeros_like(slot_sorted).at[order].set(slot_sorted)
+    keep = slot < cap
+
+    buf = jnp.zeros((e, cap, d), xf.dtype)
+    buf = buf.at[flat_expert, jnp.minimum(slot, cap - 1)].add(
+        jnp.where(keep[:, None], xf[flat_token], 0))
+    if constrain:                                            # EP layout
+        buf = shard_act(buf, "model", None, None)
+
+    gate = jnp.einsum("ecd,edf->ecf", buf, p["experts_wg"].astype(xf.dtype))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["experts_wu"].astype(xf.dtype))
+    act = jax.nn.silu(gate) * up
+    out_e = jnp.einsum("ecf,efd->ecd", act,
+                       p["experts_wd"].astype(xf.dtype))
+    if constrain:
+        out_e = shard_act(out_e, "model", None, None)
+
+    gathered = out_e[flat_expert, jnp.minimum(slot, cap - 1)]
+    contrib = jnp.where(keep[:, None],
+                        gathered * flat_gate[:, None].astype(xf.dtype), 0)
+    return jnp.zeros((t, d), xf.dtype).at[flat_token].add(contrib)
+
+
+def _dispatch_ffn_grouped(p: Params, xg: jax.Array, gate_vals, gate_idx,
+                          cfg: ModelConfig, cap: int) -> jax.Array:
+    """Group-local dispatch: the argsort/scatter run *within* each group
+    (a group = one sequence, resident on one data shard), so no
+    cross-device sort; only the combine gather moves data across the
+    expert (model) axis.  Constraints applied outside the vmap (sharding
+    constraints inside vmap see unbatched ranks)."""
+    xg = shard_act(xg, "data", None, None)
+
+    def one(xf, gv, gi):
+        return _dispatch_ffn(p, xf, gv, gi, cfg, cap, constrain=False)
+
+    out = jax.vmap(one)(xg, gate_vals, gate_idx)
+    return shard_act(out, "data", None, None)
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, S, D] -> (out [B, S, D], aux losses)."""
+    b, s, d = x.shape
+    e = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    from repro.config import PUMConfig
+    logits = layers.linear(p["router"], xf.astype(jnp.float32),
+                           PUMConfig(mode="bf16"))           # router in fp32
+    probs = jax.nn.softmax(logits, axis=-1)                  # [T, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # [T, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    if _GROUPED and b > 1:
+        cap = int(np.ceil(s * k / e * cfg.moe.capacity_factor))
+        out = _dispatch_ffn_grouped(
+            p, x, gate_vals.reshape(b, s, k), gate_idx.reshape(b, s, k),
+            cfg, cap).reshape(t, d)
+    else:
+        cap = int(np.ceil(t * k / e * cfg.moe.capacity_factor))
+        out = _dispatch_ffn(p, xf, gate_vals, gate_idx, cfg, cap)
+
+    # ---- aux losses ------------------------------------------------------
+    me = jnp.mean(probs, axis=0)                              # mean prob
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], e), axis=0)  # top-1 load
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out.reshape(b, s, d), {"moe_lb": lb_loss, "moe_z": z_loss}

@@ -1,0 +1,119 @@
+"""ResNet-20 (CIFAR-10) on the PUM execution model (paper §5.1).
+
+Convolutions use the Toeplitz/im2col expansion the paper describes
+("Convolution layers leverage a Toeplitz expansion that maximizes the
+number of rows"): each conv becomes an MVM [H*W, Cin*k*k] x [Cin*k*k, Cout]
+executed by PUMLinear (the ACE path).  Aux ops (batch-norm, ReLU, pooling)
+stay on the digital path.
+
+Functional JAX: params are nested dicts; init/apply pairs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import PUMConfig
+from repro.core.pum_linear import pum_linear
+
+Params = Dict[str, Any]
+
+
+def _he_init(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+
+
+def im2col(x: jax.Array, k: int = 3, stride: int = 1) -> jax.Array:
+    """NHWC -> [N, H', W', C*k*k] patches (SAME padding)."""
+    n, h, w, c = x.shape
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    patches = []
+    for di in range(k):
+        for dj in range(k):
+            patches.append(xp[:, di:di + h:1, dj:dj + w:1, :])
+    cols = jnp.concatenate(patches, axis=-1)        # [N, H, W, C*k*k]
+    if stride > 1:
+        cols = cols[:, ::stride, ::stride, :]
+    return cols
+
+
+def conv_init(key, cin: int, cout: int, k: int = 3) -> Params:
+    return {"w": _he_init(key, (cin * k * k, cout), cin * k * k)}
+
+
+def conv_apply(p: Params, x: jax.Array, pum: PUMConfig, k: int = 3,
+               stride: int = 1) -> jax.Array:
+    cols = im2col(x, k, stride)                     # [N,H',W',cin*k*k]
+    return pum_linear(cols, p["w"], pum)            # MVM on the ACE
+
+
+def bn_init(c: int) -> Params:
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def bn_apply(p: Params, x: jax.Array, train: bool) -> jax.Array:
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+    else:
+        mean, var = p["mean"], p["var"]
+    inv = p["scale"] * jax.lax.rsqrt(var + 1e-5)
+    return (x - mean) * inv + p["bias"]
+
+
+def block_init(key, cin: int, cout: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"conv1": conv_init(k1, cin, cout), "bn1": bn_init(cout),
+         "conv2": conv_init(k2, cout, cout), "bn2": bn_init(cout)}
+    if cin != cout:
+        p["proj"] = {"w": _he_init(k3, (cin, cout), cin)}
+    return p
+
+
+def block_apply(p: Params, x: jax.Array, pum: PUMConfig, stride: int,
+                train: bool) -> jax.Array:
+    h = conv_apply(p["conv1"], x, pum, stride=stride)
+    h = jax.nn.relu(bn_apply(p["bn1"], h, train))
+    h = conv_apply(p["conv2"], h, pum)
+    h = bn_apply(p["bn2"], h, train)
+    sc = x
+    if stride > 1:
+        sc = sc[:, ::stride, ::stride, :]
+    if "proj" in p:
+        sc = pum_linear(sc, p["proj"]["w"], pum)
+    return jax.nn.relu(h + sc)
+
+
+def resnet20_init(key, num_classes: int = 10, width: int = 16) -> Params:
+    keys = jax.random.split(key, 16)
+    p: Params = {"stem": conv_init(keys[0], 3, width),
+                 "bn0": bn_init(width)}
+    ki = 1
+    widths = [width, 2 * width, 4 * width]
+    for s, wd in enumerate(widths):
+        cin = width if s == 0 else widths[s - 1]
+        for b in range(3):
+            p[f"s{s}b{b}"] = block_init(keys[ki], cin if b == 0 else wd, wd)
+            ki += 1
+    p["fc"] = {"w": _he_init(keys[ki], (4 * width, num_classes), 4 * width),
+               "b": jnp.zeros((num_classes,))}
+    return p
+
+
+def resnet20_apply(p: Params, x: jax.Array, pum: PUMConfig,
+                   train: bool = False) -> jax.Array:
+    """x: [N, 32, 32, 3] -> logits [N, num_classes]."""
+    h = conv_apply(p["stem"], x, pum)
+    h = jax.nn.relu(bn_apply(p["bn0"], h, train))
+    for s in range(3):
+        for b in range(3):
+            stride = 2 if (s > 0 and b == 0) else 1
+            h = block_apply(p[f"s{s}b{b}"], h, pum, stride, train)
+    h = jnp.mean(h, axis=(1, 2))                    # global avg pool (DCE)
+    return pum_linear(h, p["fc"]["w"], pum, bias=p["fc"]["b"])

@@ -1,0 +1,182 @@
+"""Mamba-style selective SSM block (Jamba's sequence mixer).
+
+Train/prefill: chunked linear-recurrence — ``lax.scan`` over sequence
+chunks with an associative scan inside each chunk (keeps the
+remat-saved state at O(B * inner * state) per chunk instead of
+O(B * S * inner * state)).  Decode: single-step recurrent update against a
+carried state {h, conv window}.
+
+Per the paper's §5.2 reasoning, the recurrence's dynamic per-step products
+stay on the standard compute path; only the static projections
+(in/x/dt/out) route through PUMLinear.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.dist.sharding import shard_act
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+CHUNK = 256
+
+
+def _inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    inner = _inner(cfg)
+    st = cfg.ssm_state_dim
+    dt_rank = max(16, d // 16)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "in_proj": layers.linear_init(k1, d, 2 * inner),
+        "conv_w": jax.random.normal(k2, (inner, cfg.ssm_conv_width)) * 0.2,
+        "conv_b": jnp.zeros((inner,)),
+        "x_proj": layers.linear_init(k3, inner, dt_rank + 2 * st),
+        "dt_proj": layers.linear_init(k4, dt_rank, inner, bias=True),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32),
+                                  (inner, 1))),
+        "d_skip": jnp.ones((inner,)),
+        "out_proj": layers.linear_init(k5, inner, d),
+    }
+
+
+def make_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    inner = _inner(cfg)
+    return {"h": jnp.zeros((batch, inner, cfg.ssm_state_dim), dtype),
+            "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, inner), dtype)}
+
+
+def ssm_state_shape(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    inner = _inner(cfg)
+    sds = jax.ShapeDtypeStruct
+    return {"h": sds((batch, inner, cfg.ssm_state_dim), dtype),
+            "conv": sds((batch, cfg.ssm_conv_width - 1, inner), dtype)}
+
+
+def _causal_conv_train(x: jax.Array, w: jax.Array, b: jax.Array,
+                       ) -> jax.Array:
+    """x: [B, S, inner]; depthwise causal conv of width W via shifts."""
+    width = w.shape[-1]
+    out = x * w[:, -1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :x.shape[1]]
+        out = out + shifted * w[:, -1 - i]
+    return out + b
+
+
+def _selective_params(p: Params, xc: jax.Array, cfg: ModelConfig):
+    """xc: [B, S, inner] post-conv activations -> (dt, B_t, C_t, A)."""
+    st = cfg.ssm_state_dim
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    proj = layers.linear(p["x_proj"], xc, cfg.pum)
+    dt_raw = proj[..., :dt_rank]
+    b_t = proj[..., dt_rank:dt_rank + st]
+    c_t = proj[..., dt_rank + st:]
+    dt = jax.nn.softplus(layers.linear(p["dt_proj"], dt_raw, cfg.pum))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # [inner, st]
+    return dt, b_t, c_t, a
+
+
+def mamba(p: Params, x: jax.Array, cfg: ModelConfig, *,
+          state: Optional[Params] = None,
+          ) -> Tuple[jax.Array, Optional[Params]]:
+    """x: [B, S, D] -> ([B, S, D], state')."""
+    bsz, s, d = x.shape
+    inner = _inner(cfg)
+    xz = layers.linear(p["in_proj"], x, cfg.pum)
+    xi, z = xz[..., :inner], xz[..., inner:]
+    xi = shard_act(xi, "data", None, "model")
+
+    if state is None:
+        xc = jax.nn.silu(_causal_conv_train(xi, p["conv_w"], p["conv_b"]))
+        dt, b_t, c_t, a = _selective_params(p, xc, cfg)
+        y = _scan_train(xc, dt, b_t, c_t, a, p["d_skip"])
+        new_state = None
+    elif s > 1:
+        # prefill into state: full-seq compute + final recurrent state
+        xc = jax.nn.silu(_causal_conv_train(xi, p["conv_w"], p["conv_b"]))
+        dt, b_t, c_t, a = _selective_params(p, xc, cfg)
+
+        def step(h, args):
+            xct, dtt, btt, ctt = args
+            da = jnp.exp(dtt[:, :, None] * a)
+            db = dtt[:, :, None] * btt[:, None, :]
+            h = h * da + db * xct[:, :, None]
+            yt = jnp.einsum("bis,bs->bi", h, ctt) + p["d_skip"] * xct
+            return h, yt
+
+        xs_t = tuple(t.swapaxes(0, 1) for t in (xc, dt, b_t, c_t))
+        h, ys = jax.lax.scan(step, state["h"].astype(jnp.float32), xs_t)
+        y = ys.swapaxes(0, 1)
+        window = jnp.concatenate(
+            [state["conv"], xi.astype(state["conv"].dtype)], axis=1)
+        new_state = {"h": h, "conv": window[:, -(cfg.ssm_conv_width - 1):]}
+    else:
+        # decode: roll the conv window, single recurrence step
+        window = jnp.concatenate([state["conv"],
+                                  xi.astype(state["conv"].dtype)], axis=1)
+        xc = jnp.einsum("bwi,iw->bi", window[:, -cfg.ssm_conv_width:, :],
+                        p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc)[:, None, :]                   # [B, 1, inner]
+        dt, b_t, c_t, a = _selective_params(p, xc, cfg)
+        da = jnp.exp(dt[:, 0, :, None] * a)                # [B, inner, st]
+        db = dt[:, 0, :, None] * b_t[:, 0, None, :]        # [B, inner, st]
+        h = state["h"] * da + db * xc[:, 0, :, None]
+        y = jnp.einsum("bis,bs->bi", h, c_t[:, 0]) + p["d_skip"] * xc[:, 0]
+        y = y[:, None, :]
+        new_state = {"h": h, "conv": window[:, 1:, :]}
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = shard_act(y, "data", None, "model")
+    return layers.linear(p["out_proj"], y, cfg.pum), new_state
+
+
+def _scan_train(xc, dt, b_t, c_t, a, d_skip) -> jax.Array:
+    """Chunked linear recurrence h_t = da_t * h_{t-1} + db_t * x_t.
+
+    xc/dt: [B, S, inner]; b_t/c_t: [B, S, st]; a: [inner, st].
+    """
+    bsz, s, inner = xc.shape
+    st = b_t.shape[-1]
+    nchunks = -(-s // CHUNK)
+    pad = nchunks * CHUNK - s
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_t = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0)))
+        c_t = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0)))
+
+    def chunk_body(h0, args):
+        xcc, dtc, btc, ctc = args        # [B, CHUNK, ...]
+        da = jnp.exp(dtc[..., None] * a)                  # [B,C,inner,st]
+        db = dtc[..., None] * btc[:, :, None, :] * xcc[..., None]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        da_s, db_s = jax.lax.associative_scan(combine, (da, db), axis=1)
+        h = da_s * h0[:, None] + db_s                     # [B,C,inner,st]
+        y = jnp.einsum("bcis,bcs->bci", h, ctc) + d_skip * xcc
+        return h[:, -1], y
+
+    def scan_fn(h, args):
+        return jax.remat(chunk_body)(h, args)
+
+    xs = tuple(t.reshape(bsz, nchunks, CHUNK, -1).swapaxes(0, 1)
+               for t in (xc, dt, b_t, c_t))
+    h0 = jnp.zeros((bsz, inner, st), jnp.float32)
+    _, ys = jax.lax.scan(scan_fn, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, nchunks * CHUNK, inner)
+    return y[:, :s]

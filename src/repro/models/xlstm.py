@@ -1,0 +1,278 @@
+"""xLSTM blocks (Beck et al., 2024): mLSTM (matrix memory) and sLSTM
+(scalar memory with exponential gating).
+
+mLSTM admits a parallel (attention-like) form used for train/prefill, and
+a recurrent form for decode — which is why xlstm-350m runs the
+``long_500k`` decode shape (O(1) state per step, no KV cache).
+sLSTM's recurrence is truly sequential (state nonlinearity): train uses a
+``lax.scan`` over time.
+
+Simplifications vs the reference implementation (documented in DESIGN.md):
+no causal-conv front on q/k, block-diagonal projections folded into dense
+ones.  Projections route through PUMLinear; the recurrences are dynamic
+per-step products (standard path), per the paper's §5.2 split.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.dist.sharding import shard_act
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    inner = 2 * cfg.d_model
+    heads = cfg.num_heads
+    return inner, heads, inner // heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    inner, heads, hd = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wqkv": layers.linear_init(ks[0], d, 3 * inner),
+        "wi": layers.linear_init(ks[1], d, heads, bias=True),
+        "wf": layers.linear_init(ks[2], d, heads, bias=True),
+        "wzo": layers.linear_init(ks[3], d, inner),   # output gate pre-act
+        "out_proj": layers.linear_init(ks[4], inner, d),
+    }
+
+
+def mlstm_state_shape(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    inner, heads, hd = _dims(cfg)
+    sds = jax.ShapeDtypeStruct
+    return {"c": sds((batch, heads, hd, hd), dtype),
+            "n": sds((batch, heads, hd), dtype),
+            "m": sds((batch, heads), dtype)}
+
+
+def make_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    inner, heads, hd = _dims(cfg)
+    return {"c": jnp.zeros((batch, heads, hd, hd), dtype),
+            "n": jnp.zeros((batch, heads, hd), dtype),
+            "m": jnp.full((batch, heads), -1e30, dtype)}
+
+
+def mlstm(p: Params, x: jax.Array, cfg: ModelConfig, *,
+          state: Optional[Params] = None,
+          ) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    inner, heads, hd = _dims(cfg)
+    qkv = layers.linear(p["wqkv"], x, cfg.pum)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, heads, hd)
+    k = k.reshape(b, s, heads, hd) / np.sqrt(hd)
+    v = v.reshape(b, s, heads, hd)
+    i_pre = layers.linear(p["wi"], x, cfg.pum).astype(jnp.float32)  # [B,S,H]
+    f_pre = layers.linear(p["wf"], x, cfg.pum).astype(jnp.float32)
+    o_gate = jax.nn.sigmoid(layers.linear(p["wzo"], x, cfg.pum))
+
+    if state is None:
+        y = _mlstm_parallel(q, k, v, i_pre, f_pre)
+        new_state = None
+    elif s > 1:
+        # prefill into state: sequential recurrence (small-scale serving)
+        def step(carry, args):
+            c0, n0, m0 = carry
+            qt, kt, vt, it, ft = args
+            logf = jax.nn.log_sigmoid(ft)
+            m1 = jnp.maximum(logf + m0, it)
+            fp = jnp.exp(logf + m0 - m1)
+            ip = jnp.exp(it - m1)
+            c1 = c0 * fp[..., None, None] + ip[..., None, None] * \
+                jnp.einsum("bhd,bhe->bhde", vt.astype(jnp.float32),
+                           kt.astype(jnp.float32))
+            n1 = n0 * fp[..., None] + ip[..., None] * kt.astype(jnp.float32)
+            den = jnp.maximum(jnp.abs(jnp.einsum(
+                "bhd,bhd->bh", n1, qt.astype(jnp.float32))), jnp.exp(-m1))
+            ht = jnp.einsum("bhde,bhe->bhd", c1,
+                            qt.astype(jnp.float32)) / den[..., None]
+            return (c1, n1, m1), ht
+
+        xs_t = tuple(t.swapaxes(0, 1) for t in (q, k, v, i_pre, f_pre))
+        (c, n, m), hs = jax.lax.scan(
+            step, (state["c"].astype(jnp.float32),
+                   state["n"].astype(jnp.float32),
+                   state["m"].astype(jnp.float32)), xs_t)
+        y = hs.swapaxes(0, 1).astype(x.dtype)
+        new_state = {"c": c, "n": n, "m": m}
+    else:
+        # single-step recurrent update (stabilised exponential gating)
+        logf = jax.nn.log_sigmoid(f_pre[:, 0])             # [B, H]
+        m_new = jnp.maximum(logf + state["m"], i_pre[:, 0])
+        fp = jnp.exp(logf + state["m"] - m_new)
+        ip = jnp.exp(i_pre[:, 0] - m_new)
+        c = state["c"] * fp[..., None, None] + ip[..., None, None] \
+            * jnp.einsum("bhd,bhe->bhde", v[:, 0].astype(jnp.float32),
+                         k[:, 0].astype(jnp.float32))
+        n = state["n"] * fp[..., None] + ip[..., None] \
+            * k[:, 0].astype(jnp.float32)
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", n,
+                               q[:, 0].astype(jnp.float32))),
+            jnp.exp(-m_new))
+        h = jnp.einsum("bhde,bhe->bhd", c, q[:, 0].astype(jnp.float32)) \
+            / denom[..., None]
+        y = h[:, None].astype(x.dtype)
+        new_state = {"c": c, "n": n, "m": m_new}
+
+    y = (y.reshape(b, s, inner) * o_gate).astype(x.dtype)
+    y = shard_act(y, "data", None, "model")
+    return layers.linear(p["out_proj"], y, cfg.pum), new_state
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre, chunk: int = 1024) -> jax.Array:
+    """Parallel form, chunked (flash-style online accumulation).
+
+    Decay d_ij = exp(F_i - F_j + i_j - m_i) for j <= i, with F the
+    cumulative log-forget.  Scores (q.k)*d are signed, so only the decay
+    exponential is max-stabilised — rescaling on stabiliser updates is
+    sign-safe.  O(chunk^2) score memory instead of O(S^2).
+    """
+    b, s, h, hd = q.shape
+    cq = ck = min(chunk, s)
+    nq = -(-s // cq)
+    nk = -(-s // ck)
+    pad = nq * cq - s
+    logf = jax.nn.log_sigmoid(f_pre)
+    f_cum = jnp.cumsum(logf, axis=1)                       # [B,S,H]
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, zp + ((0, 0),))
+        k = jnp.pad(k, zp + ((0, 0),))
+        v = jnp.pad(v, zp + ((0, 0),))
+        f_cum = jnp.pad(f_cum, zp, constant_values=0.0)
+        i_pre = jnp.pad(i_pre, zp, constant_values=-1e30)
+    qc = q.reshape(b, nq, cq, h, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, nk, ck, h, hd)
+    vc = v.reshape(b, nk, ck, h, hd)
+    fc = f_cum.reshape(b, nk, ck, h)
+    ic = i_pre.reshape(b, nk, ck, h)
+
+    def per_q_chunk(args):
+        qi, qblk, fq = args                  # fq: [B, CQ, H] cumulative F_i
+        m0 = jnp.full((b, cq, h), -1e30, jnp.float32)
+        den0 = jnp.zeros((b, cq, h), jnp.float32)
+        acc0 = jnp.zeros((b, cq, h, hd), jnp.float32)
+
+        def body(carry, kj):
+            m, den, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(kc, kj, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vc, kj, 1, keepdims=False)
+            fk = jax.lax.dynamic_index_in_dim(fc, kj, 1, keepdims=False)
+            ik = jax.lax.dynamic_index_in_dim(ic, kj, 1, keepdims=False)
+            logd = (fq[:, :, None, :] - fk[:, None, :, :]
+                    + ik[:, None, :, :])                  # [B,CQ,CK,H]
+            qpos = qi * cq + jnp.arange(cq)
+            kpos = kj * ck + jnp.arange(ck)
+            causal = qpos[:, None] >= kpos[None, :]
+            logd = jnp.where(causal[None, :, :, None], logd, -1e30)
+            m_new = jnp.maximum(m, jnp.max(logd, axis=2))
+            w = jnp.exp(logd - m_new[:, :, None, :])
+            sc = jnp.einsum("bqhd,bthd->bqth", qblk.astype(jnp.float32),
+                            kblk.astype(jnp.float32)) * w
+            corr = jnp.exp(m - m_new)
+            den_new = den * corr + jnp.sum(sc, axis=2)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqth,bthd->bqhd", sc, vblk.astype(jnp.float32))
+            return (m_new, den_new, acc_new), None
+
+        (m, den, acc), _ = jax.lax.scan(body, (m0, den0, acc0),
+                                        jnp.arange(nk))
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m))
+        return acc / denom[..., None]
+
+    fqc = f_cum.reshape(b, nq, cq, h).transpose(1, 0, 2, 3)
+    outs = jax.lax.map(per_q_chunk, (jnp.arange(nq), qc, fqc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * cq, h, hd)
+    return out[:, :s].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    inner, heads, hd = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": layers.linear_init(ks[0], d, inner, bias=True),
+        "wi": layers.linear_init(ks[1], d, inner, bias=True),
+        "wf": layers.linear_init(ks[2], d, inner, bias=True),
+        "wo": layers.linear_init(ks[3], d, inner, bias=True),
+        "out_proj": layers.linear_init(ks[4], inner, d),
+    }
+
+
+def slstm_state_shape(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    inner, _, _ = _dims(cfg)
+    sds = jax.ShapeDtypeStruct
+    return {"c": sds((batch, inner), dtype), "n": sds((batch, inner), dtype),
+            "m": sds((batch, inner), dtype)}
+
+
+def make_slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    inner, _, _ = _dims(cfg)
+    return {"c": jnp.zeros((batch, inner), dtype),
+            "n": jnp.zeros((batch, inner), dtype),
+            "m": jnp.full((batch, inner), -1e30, dtype)}
+
+
+def _slstm_step(carry, gates):
+    c, n, m = carry
+    z, i_pre, logf, o = gates
+    m_new = jnp.maximum(logf + m, i_pre)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(i_pre - m_new)
+    c_new = fp * c + ip * jnp.tanh(z)
+    n_new = fp * n + ip
+    h = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new), h
+
+
+def slstm(p: Params, x: jax.Array, cfg: ModelConfig, *,
+          state: Optional[Params] = None,
+          ) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    inner, _, _ = _dims(cfg)
+    z = layers.linear(p["wz"], x, cfg.pum).astype(jnp.float32)
+    i_pre = layers.linear(p["wi"], x, cfg.pum).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        layers.linear(p["wf"], x, cfg.pum).astype(jnp.float32))
+    o = jax.nn.sigmoid(layers.linear(p["wo"], x, cfg.pum)
+                       .astype(jnp.float32))
+
+    if state is None or s > 1:
+        if state is None:
+            carry = (jnp.zeros((b, inner)), jnp.zeros((b, inner)),
+                     jnp.full((b, inner), -1e30))
+        else:
+            carry = (state["c"].astype(jnp.float32),
+                     state["n"].astype(jnp.float32),
+                     state["m"].astype(jnp.float32))
+        gates = tuple(t.swapaxes(0, 1) for t in (z, i_pre, logf, o))
+        (c, n, m), hs = jax.lax.scan(_slstm_step, carry, gates)
+        y = hs.swapaxes(0, 1).astype(x.dtype)
+        new_state = None if state is None else {"c": c, "n": n, "m": m}
+    else:
+        carry = (state["c"], state["n"], state["m"])
+        (c, n, m), h = _slstm_step(carry, (z[:, 0], i_pre[:, 0],
+                                           logf[:, 0], o[:, 0]))
+        y = h[:, None].astype(x.dtype)
+        new_state = {"c": c, "n": n, "m": m}
+
+    y = shard_act(y, "data", None, "model")
+    return layers.linear(p["out_proj"], y, cfg.pum), new_state

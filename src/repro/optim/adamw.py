@@ -1,0 +1,67 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Optimizer state is a pytree mirroring params (m, v in f32), so it shards
+identically to the FSDP parameter layout (ZeRO-style sharded optimiser).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+OptState = Dict[str, Any]
+
+
+def adamw_init(params: Any) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree_util.tree_map(jnp.copy, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float,
+                        ) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(params: Any, grads: Any, state: OptState, lr: jax.Array,
+                 cfg: TrainConfig) -> Tuple[Any, OptState]:
+    count = state["count"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,36 @@
+"""LR schedules: cosine, constant, and WSD (warmup-stable-decay — the
+minicpm-2b training feature, arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def make_schedule(cfg: TrainConfig):
+    base = cfg.learning_rate
+    warm = max(cfg.warmup_steps, 1)
+    total = max(cfg.steps, warm + 1)
+
+    def cosine(step):
+        warm_lr = base * step / warm
+        frac = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0, 1)
+        cos_lr = base * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warm, warm_lr, cos_lr)
+
+    def constant(step):
+        return jnp.where(step < warm, base * step / warm, base)
+
+    def wsd(step):
+        """Warmup -> stable plateau -> sharp decay in the final
+        ``wsd_decay_frac`` of training (exponential-style to 10%)."""
+        decay_steps = jnp.maximum(int(total * cfg.wsd_decay_frac), 1)
+        decay_start = total - decay_steps
+        warm_lr = base * step / warm
+        frac = jnp.clip((step - decay_start) / decay_steps, 0, 1)
+        decay_lr = base * jnp.power(0.1, frac)
+        return jnp.where(step < warm, warm_lr,
+                         jnp.where(step < decay_start, base, decay_lr))
+
+    return {"cosine": cosine, "constant": constant, "wsd": wsd}[cfg.schedule]

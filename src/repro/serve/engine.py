@@ -1,0 +1,90 @@
+"""Batched serving engine: prefill + decode with per-family state.
+
+``make_decode_step`` builds the jittable one-token step that the dry-run
+lowers for the ``decode_*`` shapes (one new token against a seq_len-deep
+cache), and that ``generate`` loops on CPU for the runnable examples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import lm
+
+
+def make_decode_step(cfg: ModelConfig, scan_layers: bool = True):
+    """(params, states, token [B,1], cache_index, extras) ->
+    (logits [B,1,V], states')."""
+
+    def decode_step(params, states, token, cache_index, *,
+                    encoder_out: Optional[jax.Array] = None):
+        logits, states, _ = lm.forward(
+            params, token, cfg, states=states, cache_index=cache_index,
+            encoder_out=encoder_out, last_only=True,
+            scan_layers=scan_layers)
+        return logits, states
+
+    return decode_step
+
+
+def sample_token(logits: jax.Array, key, temperature: float = 0.0,
+                 ) -> jax.Array:
+    """logits: [B, 1, V] -> [B, 1] int32 (greedy at temperature 0)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
+
+
+class ServeEngine:
+    """Small-scale engine for the examples/tests (full batched semantics;
+    on TPU the same steps run under pjit via launch/serve.py)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(make_decode_step(cfg))
+
+    def prefill(self, tokens: jax.Array,
+                encoder_frames: Optional[jax.Array] = None,
+                ) -> Tuple[Any, jax.Array, Optional[jax.Array]]:
+        b, s = tokens.shape
+        states = lm.init_state(self.cfg, b, self.max_len)
+        encoder_out = None
+        if self.cfg.is_encoder_decoder and encoder_frames is not None:
+            encoder_out = lm._run_encoder(self.params, self.cfg,
+                                          encoder_frames)
+        logits, states, _ = lm.forward(
+            self.params, tokens, self.cfg, states=states,
+            cache_index=jnp.int32(0), encoder_out=encoder_out,
+            last_only=True)
+        return states, logits, encoder_out
+
+    def generate(self, prompt: jax.Array, steps: int,
+                 temperature: float = 0.0,
+                 encoder_frames: Optional[jax.Array] = None,
+                 seed: int = 0) -> jax.Array:
+        """prompt: [B, S] -> [B, S + steps] greedy/sampled continuation."""
+        b, s = prompt.shape
+        assert s + steps <= self.max_len
+        states, logits, encoder_out = self.prefill(prompt, encoder_frames)
+        key = jax.random.PRNGKey(seed)
+        out = [prompt]
+        index = jnp.int32(s)
+        tok = sample_token(logits, key, temperature)
+        for i in range(steps):
+            out.append(tok)
+            if i == steps - 1:
+                break
+            key = jax.random.fold_in(key, i)
+            logits, states = self._decode(self.params, states, tok, index,
+                                          encoder_out=encoder_out)
+            index = index + 1
+            tok = sample_token(logits, key, temperature)
+        return jnp.concatenate(out, axis=1)

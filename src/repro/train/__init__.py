@@ -1,0 +1,2 @@
+from repro.train.step import make_loss_fn, make_train_step
+from repro.train.trainer import Trainer

@@ -1,0 +1,119 @@
+"""Loss + train step factory.
+
+The step is a pure function (params, opt_state, batch, step) ->
+(params, opt_state, metrics), jit/pjit-able; gradient accumulation via an
+inner lax.scan over microbatches; optional int8 gradient compression with
+error feedback (residual carried in opt_state["ef"]).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShardingConfig, TrainConfig
+from repro.dist import compress
+from repro.models import lm
+from repro.optim import adamw, schedules
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 0.001
+
+
+def make_loss_fn(cfg: ModelConfig, scfg: ShardingConfig = ShardingConfig()):
+    def loss_fn(params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        tokens = batch["tokens"]
+        if scfg.bf16_params:
+            # cast sharded master weights before use: FSDP all-gathers run
+            # in bf16 (the convert stays on the shard)
+            params = jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+        logits, _, aux = lm.forward(
+            params, tokens, cfg,
+            image_embeds=batch.get("image_embeds"),
+            encoder_frames=batch.get("encoder_frames"),
+            remat=scfg.remat != "none",
+            scan_layers=scfg.scan_layers)
+        # next-token loss over the *text* positions only
+        logits_t = logits[:, -tokens.shape[1]:]
+        pred = logits_t[:, :-1]
+        tgt = tokens[:, 1:]
+        ll = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(ll, tgt[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+        metrics = {"loss": loss}
+        if "moe_lb" in aux:
+            loss = loss + MOE_LB_WEIGHT * aux["moe_lb"] \
+                + MOE_Z_WEIGHT * aux["moe_z"]
+            metrics["moe_lb"] = aux["moe_lb"]
+        metrics["total_loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def init_opt_state(params, tcfg: TrainConfig,
+                   scfg: ShardingConfig = ShardingConfig()):
+    state = adamw.adamw_init(params)
+    if scfg.grad_compress:
+        state["ef"] = compress.zeros_like_residual(params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    scfg: ShardingConfig = ShardingConfig()):
+    loss_fn = make_loss_fn(cfg, scfg)
+    sched = schedules.make_schedule(tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatch and tcfg.microbatch > 0:
+            b = batch["tokens"].shape[0]
+            n_micro = max(1, b // tcfg.microbatch)
+
+            def mb_slice(t, i):
+                return jax.lax.dynamic_slice_in_dim(
+                    t, i * (t.shape[0] // n_micro),
+                    t.shape[0] // n_micro, 0)
+
+            def body(carry, i):
+                acc, msum = carry
+                mb = {k: mb_slice(v, i) for k, v in batch.items()}
+                (_, metrics), g = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                msum = jax.tree_util.tree_map(jnp.add, msum, metrics)
+                return (acc, msum), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, msum), _ = jax.lax.scan(
+                body, (zeros, {"loss": 0.0, "total_loss": 0.0}
+                       if cfg.moe.num_experts == 0 else
+                       {"loss": 0.0, "total_loss": 0.0, "moe_lb": 0.0}),
+                jnp.arange(n_micro))
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+            metrics = jax.tree_util.tree_map(lambda m: m / n_micro, msum)
+            return grads, metrics
+        (_, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        if scfg.grad_compress:
+            grads, new_ef = compress.ef_compress_grads(grads,
+                                                       opt_state["ef"])
+        grads, gnorm = adamw.clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = sched(opt_state["count"])
+        params, new_opt = adamw.adamw_update(params, grads, opt_state, lr,
+                                             tcfg)
+        if scfg.grad_compress:
+            new_opt["ef"] = new_ef
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params, new_opt, metrics
+
+    return train_step

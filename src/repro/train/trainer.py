@@ -1,0 +1,81 @@
+"""The training loop: checkpoint/resume, preemption, straggler watch.
+
+Single-host here; the structure (per-host data slices, heartbeats, elastic
+restore) is the multi-host one — see ckpt/ and ft/ for the pieces.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.config import (MeshConfig, ModelConfig, ShardingConfig,
+                          TrainConfig)
+from repro.ckpt import CheckpointManager
+from repro.data.synthetic import SyntheticTokens
+from repro.ft import PreemptionHandler, StragglerDetector
+from repro.models import lm
+from repro.train import step as step_mod
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 scfg: ShardingConfig = ShardingConfig(),
+                 batch: int = 8, seq: int = 64,
+                 preemption: Optional[PreemptionHandler] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.scfg = scfg
+        self.batch = batch
+        self.seq = seq
+        self.data = SyntheticTokens(cfg, batch, seq, seed=tcfg.seed)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+        self.preemption = preemption or PreemptionHandler(install=False)
+        self.straggler = StragglerDetector(n_hosts=1)
+        self.train_step = jax.jit(step_mod.make_train_step(cfg, tcfg, scfg),
+                                  donate_argnums=(0, 1) if scfg.donate
+                                  else ())
+        self.history: list = []
+
+    def init_or_restore(self):
+        params = lm.init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        opt_state = step_mod.init_opt_state(params, self.tcfg, self.scfg)
+        start = 0
+        restored = self.ckpt.restore({"params": params,
+                                      "opt_state": opt_state})
+        if restored is not None:
+            tree, start = restored
+            params, opt_state = tree["params"], tree["opt_state"]
+        return params, opt_state, start
+
+    def run(self, steps: Optional[int] = None) -> Dict[str, Any]:
+        params, opt_state, start = self.init_or_restore()
+        steps = steps if steps is not None else self.tcfg.steps
+        step = start
+        stopped_early = False
+        for step in range(start, steps):
+            t0 = time.perf_counter()
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.data.batch(step).items()}
+            params, opt_state, metrics = self.train_step(params, opt_state,
+                                                         batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self.straggler.report(0, dt)
+            metrics["step_time_s"] = dt
+            metrics["step"] = step
+            self.history.append(metrics)
+            if (step + 1) % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step + 1, {"params": params,
+                                          "opt_state": opt_state})
+            if self.preemption.should_stop:
+                self.ckpt.save(step + 1, {"params": params,
+                                          "opt_state": opt_state})
+                stopped_early = True
+                break
+        return {"params": params, "opt_state": opt_state,
+                "last_step": step + 1, "history": self.history,
+                "stopped_early": stopped_early,
+                "stragglers": self.straggler.stragglers()}

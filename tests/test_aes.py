@@ -1,0 +1,108 @@
+"""AES on DARTH-PUM: FIPS-197 known-answer tests + properties across all
+three execution paths (numpy oracle, JAX bulk, gate-accurate DCE)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import aes_app
+
+
+def _hex(s: str) -> np.ndarray:
+    return np.frombuffer(bytes.fromhex(s), np.uint8).copy()
+
+
+# FIPS-197 Appendix C vectors
+PT = "00112233445566778899aabbccddeeff"
+KEY128 = "000102030405060708090a0b0c0d0e0f"
+CT128 = "69c4e0d86a7b0430d8cdb78070b4c55a"
+KEY192 = "000102030405060708090a0b0c0d0e0f1011121314151617"
+CT192 = "dda97ca4864cdfe06eaf70a0ec0d7191"
+KEY256 = "000102030405060708090a0b0c0d0e0f101112131415161718191a1b1c1d1e1f"
+CT256 = "8ea2b7ca516745bfeafc49904b496089"
+
+# FIPS-197 Appendix B vector
+PT_B = "3243f6a8885a308d313198a2e0370734"
+KEY_B = "2b7e151628aed2a6abf7158809cf4f3c"
+CT_B = "3925841d02dc09fbdc118597196a0b32"
+
+
+@pytest.mark.parametrize("key,ct", [(KEY128, CT128), (KEY192, CT192),
+                                    (KEY256, CT256)])
+def test_numpy_reference_fips197(key, ct):
+    got = aes_app.aes_encrypt_np(_hex(PT), _hex(key))
+    np.testing.assert_array_equal(got, _hex(ct))
+    back = aes_app.aes_decrypt_np(_hex(ct), _hex(key))
+    np.testing.assert_array_equal(back, _hex(PT))
+
+
+@pytest.mark.parametrize("key,ct", [(KEY128, CT128), (KEY192, CT192),
+                                    (KEY256, CT256)])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_jax_pum_path_fips197(key, ct, use_kernel):
+    """The PUM mapping (S-box gather + GF(2) linear layer + XOR)."""
+    pt = _hex(PT)[None, :]
+    got = np.asarray(aes_app.aes_encrypt(pt, _hex(key),
+                                         use_kernel=use_kernel))
+    np.testing.assert_array_equal(got[0], _hex(ct))
+    back = np.asarray(aes_app.aes_decrypt(got, _hex(key),
+                                          use_kernel=use_kernel))
+    np.testing.assert_array_equal(back[0], _hex(PT))
+
+
+def test_jax_appendix_b_vector():
+    got = np.asarray(aes_app.aes_encrypt(_hex(PT_B)[None], _hex(KEY_B)))
+    np.testing.assert_array_equal(got[0], _hex(CT_B))
+
+
+@given(seed=st.integers(0, 2**31 - 1), klen=st.sampled_from([16, 24, 32]))
+@settings(max_examples=10, deadline=None)
+def test_bulk_matches_reference_and_roundtrips(seed, klen):
+    rng = np.random.default_rng(seed)
+    pts = rng.integers(0, 256, size=(32, 16), dtype=np.uint8)
+    key = rng.integers(0, 256, size=(klen,), dtype=np.uint8)
+    ct_jax = np.asarray(aes_app.aes_encrypt(pts, key))
+    ct_np = aes_app.aes_encrypt_np(pts, key)
+    np.testing.assert_array_equal(ct_jax, ct_np)
+    back = np.asarray(aes_app.aes_decrypt(ct_jax, key))
+    np.testing.assert_array_equal(back, pts)
+
+
+def test_gate_accurate_dce_path_fips197():
+    """Full in-memory execution through the NOR simulator + compensated
+    ACE MVM reproduces the exact ciphertext and tallies gate costs."""
+    from repro.core.digital import GateCounter
+    ctr = GateCounter()
+    pts = np.stack([_hex(PT), _hex(PT_B)])
+    got = aes_app.aes_encrypt_dce(pts, _hex(KEY128), ctr)
+    np.testing.assert_array_equal(got[0], _hex(CT128))
+    # second block uses a different key schedule -> only check shape/dtype
+    assert got.shape == (2, 16) and got.dtype == np.uint8
+    assert ctr.nor > 0 and ctr.copy > 0     # real gate activity recorded
+
+
+def test_linear_matrix_construction():
+    """M_LIN == MixColumns∘ShiftRows on random states (bit-exact)."""
+    rng = np.random.default_rng(0)
+    m_lin, m_shift, m_invmix = aes_app._linear_matrices()
+    s = rng.integers(0, 256, size=(50, 16), dtype=np.uint8)
+    want = aes_app._mix_columns_np(s[:, aes_app._SHIFT_PERM],
+                                   aes_app._MIX_MAT)
+    bits = aes_app._bytes_to_bits(s)
+    got_bits = (bits.astype(np.int32) @ m_lin.astype(np.int32)) & 1
+    got = aes_app._bits_to_bytes(got_bits.astype(np.uint8))
+    np.testing.assert_array_equal(got, want)
+    # inverse-mix inverts mix
+    mixed = aes_app._mix_columns_np(s, aes_app._MIX_MAT)
+    unmixed = aes_app._mix_columns_np(mixed, aes_app._INV_MIX_MAT)
+    np.testing.assert_array_equal(unmixed, s)
+
+
+def test_key_expansion_appendix_a():
+    """FIPS-197 Appendix A.1 expansion of the Appendix B key."""
+    rk = aes_app.key_expansion(_hex(KEY_B))
+    assert rk.shape == (11, 16)
+    # w[43] (last word) = b6630ca6
+    np.testing.assert_array_equal(rk[10, 12:], _hex("b6630ca6"))
+    # w[4..7] round 1 key starts a0fafe17
+    np.testing.assert_array_equal(rk[1, :4], _hex("a0fafe17"))

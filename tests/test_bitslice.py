@@ -1,0 +1,66 @@
+"""Property tests for bit-slicing arithmetic (oracle of the kernel)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitslice
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@given(bits=st.integers(2, 8), m=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_plane_roundtrip(bits, m, seed):
+    """slice -> recombine is the identity on signed ints."""
+    rng = np.random.default_rng(seed)
+    qmax = (1 << (bits - 1)) - 1
+    q = jnp.asarray(rng.integers(-qmax, qmax + 1, size=(5, 7)), jnp.int32)
+    back = bitslice.pack_unpack_roundtrip(q, bits, m)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8]),
+       m=st.sampled_from([1, 2]))
+@settings(max_examples=20, deadline=None)
+def test_bitsliced_matmul_exact(seed, bits, m):
+    """Bit-sliced MVM == plain int matmul (losslessness, paper Fig. 2)."""
+    rng = np.random.default_rng(seed)
+    qmax = (1 << (bits - 1)) - 1
+    x = jnp.asarray(rng.integers(-127, 128, size=(3, 16)), jnp.int32)
+    w = jnp.asarray(rng.integers(-qmax, qmax + 1, size=(16, 9)), jnp.int32)
+    got = bitslice.bitsliced_matmul_exact(x, w, bits, m)
+    want = x @ w
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8, 12]),
+       signed=st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_input_bit_slicing(seed, bits, signed):
+    """Binary input planes weighted-sum back to the original value."""
+    rng = np.random.default_rng(seed)
+    lo = -(1 << (bits - 1)) if signed else 0
+    hi = (1 << (bits - 1)) if signed else (1 << bits)
+    x = jnp.asarray(rng.integers(lo, hi, size=(4, 6)), jnp.int32)
+    planes, weights = bitslice.slice_bits_input(x, bits, signed=signed)
+    back = sum(int(weights[i]) * np.asarray(planes[i], np.int64)
+               for i in range(bits))
+    np.testing.assert_array_equal(back, np.asarray(x, np.int64))
+    assert set(np.unique(np.asarray(planes))) <= {0, 1}
+
+
+def test_quantize_symmetric_bounds():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(32, 32)) * 3)
+    q, s = bitslice.quantize_symmetric(x, 8)
+    assert int(jnp.max(jnp.abs(q))) <= 127
+    err = np.abs(np.asarray(bitslice.dequantize(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_quantize_per_channel():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(16, 8)))
+    q, s = bitslice.quantize_symmetric(x, 8, axis=0)
+    assert s.shape == (1, 8)

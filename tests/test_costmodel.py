@@ -1,0 +1,120 @@
+"""Cost-model trend validation against the paper's claims (§7).
+
+These assert *orderings and bands*, not exact figures — the model derives
+from paper Tables 2-3 plus documented commodity constants; EXPERIMENTS.md
+carries the full ours-vs-paper table.
+"""
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import isa
+
+
+@pytest.fixture(scope="module")
+def results():
+    models = [cm.DarthPUM("sar"), cm.DigitalPUM(), cm.BaselineCPUAnalog(),
+              cm.AppAccel(), cm.GPU()]
+    return {wl: {m.name: getattr(m, wl)() for m in models}
+            for wl in ("aes", "resnet20", "encoder")}
+
+
+def test_darth_beats_baseline_everywhere(results):
+    """Paper Fig 13: DARTH-PUM speedups of 59.4/14.8/40.8x over Baseline."""
+    bands = {"aes": (10, 120), "resnet20": (5, 40), "encoder": (10, 120)}
+    for wl, (lo, hi) in bands.items():
+        sp = results[wl]["DARTH-PUM"].speedup_over(results[wl]["Baseline"])
+        assert lo < sp < hi, (wl, sp)
+
+
+def test_darth_beats_digital_pum(results):
+    """DARTH-PUM's hybrid execution beats pure digital PUM by large factors
+    on matrix-heavy workloads (paper §7.1)."""
+    for wl in ("aes", "resnet20", "encoder"):
+        assert results[wl]["DARTH-PUM"].speedup_over(
+            results[wl]["DigitalPUM"]) > 10
+
+
+def test_energy_savings(results):
+    """Paper Fig 16: DARTH saves energy vs Baseline on every workload."""
+    for wl in ("aes", "resnet20", "encoder"):
+        assert results[wl]["DARTH-PUM"].energy_saving_over(
+            results[wl]["Baseline"]) > 5
+
+
+def test_ramp_beats_sar_only_for_aes():
+    """Paper §7.3: ramp ADCs win only for AES (early termination + parallel
+    line read-out); SAR wins elsewhere."""
+    for wl in ("aes", "resnet20", "encoder"):
+        s = getattr(cm.DarthPUM("sar"), wl)().throughput
+        r = getattr(cm.DarthPUM("ramp"), wl)().throughput
+        if wl == "aes":
+            assert r > s
+        else:
+            assert s > r
+
+
+def test_gpu_comparison_average(results):
+    """Paper Fig 18: avg throughput gain over the RTX 4090 ~ 11.8x."""
+    sp = [results[wl]["DARTH-PUM"].speedup_over(results[wl]["GPU"])
+          for wl in ("aes", "resnet20", "encoder")]
+    avg = sum(sp) / 3
+    assert 4 < avg < 30, avg
+
+
+def test_naive_hybrid_has_interior_peak():
+    """Paper Fig 7: hybrid throughput peaks at an interior analog fraction
+    (H-5-ish), then declines as digital pipes starve."""
+    fracs = [0.05, 0.15, 0.25, 0.5, 0.7, 0.9]
+    thr = [cm.naive_hybrid_aes(f) for f in fracs]
+    peak = max(range(len(fracs)), key=lambda i: thr[i])
+    assert 0 < peak < len(fracs) - 1
+    assert thr[peak] > cm.DigitalPUM().aes().throughput * 2
+
+
+def test_ideal_logic_family_marginal_at_peak():
+    """Paper Fig 7: an ideal logic family adds <10% at the hybrid peak
+    (3.2% in the paper) — NOR-only hardware suffices."""
+    base = cm.naive_hybrid_aes(0.25)
+    ideal = cm.naive_hybrid_aes(0.25, ideal_logic=True)
+    assert (ideal / base - 1.0) < 0.10
+
+
+def test_interface_optimization_wins():
+    """The §4.1 shift-during-transfer + IIU schedule beats the naive
+    write/shift/add serialisation (Fig 10)."""
+    t_unopt = isa.schedule_mvm(8, 4, optimized=False)
+    t_opt = isa.schedule_mvm(8, 4, optimized=True)
+    assert t_opt.total < t_unopt.total / 2
+    # and at the chip level
+    assert cm.naive_hybrid_aes(0.25, optimized_interface=True) > \
+        cm.naive_hybrid_aes(0.25, optimized_interface=False)
+
+
+def test_appaccel_relationships(results):
+    """Paper §7.1: AppAccel beats DARTH for ResNet (SFU-rich) and LLM
+    encoder, but DARTH crushes serial AES-NI."""
+    assert results["aes"]["DARTH-PUM"].speedup_over(
+        results["aes"]["AppAccel"]) > 5
+    assert results["resnet20"]["AppAccel"].throughput > \
+        results["resnet20"]["DARTH-PUM"].throughput * 0.9
+    assert results["encoder"]["AppAccel"].throughput > \
+        results["encoder"]["DARTH-PUM"].throughput
+
+
+def test_vacore_allocation():
+    """hct.py static planning consistent with Table 2 geometry."""
+    from repro.core.hct import DarthPUMDevice, hcts_for_matrix
+    assert hcts_for_matrix(64, 64, 8, 2) == 1     # 4 slices x 2 rails = 8 arr
+    assert hcts_for_matrix(768, 3072, 8, 4) == 36
+    dev = DarthPUMDevice(n_hcts=4)
+    v = dev.allocVACore(element_size=8, bits_per_cell=2)
+    assert v.n_slices == 4 and v.arrays == 8
+    import numpy as np
+    h = dev.setMatrix(np.eye(64, dtype=np.float32) * 0.5, 8, 1)
+    assert len(h.hcts) >= 1
+    x = np.ones((2, 64), np.float32)
+    y = dev.execMVM(h, x)
+    np.testing.assert_allclose(np.asarray(y), x * 0.5, atol=0.02)
+    dev.disableAnalogMode(h)
+    y2 = dev.execMVM(h, x)
+    np.testing.assert_allclose(np.asarray(y2), x * 0.5, atol=0.02)

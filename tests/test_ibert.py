@@ -1,0 +1,63 @@
+"""I-BERT integer-kernel accuracy bounds (the DCE auxiliary functions)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ibert
+
+
+def test_i_sqrt_exact():
+    n = jnp.asarray([0, 1, 2, 3, 4, 15, 16, 17, 255, 256, 1 << 20,
+                     (1 << 20) + 1, 999983], jnp.int32)
+    got = np.asarray(ibert.i_sqrt(n))
+    want = np.floor(np.sqrt(np.asarray(n, np.float64))).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_i_sqrt_property(seed):
+    rng = np.random.default_rng(seed)
+    n = jnp.asarray(rng.integers(0, 1 << 28, size=(64,)), jnp.int32)
+    r = np.asarray(ibert.i_sqrt(n)).astype(np.int64)
+    nn = np.asarray(n, np.int64)
+    assert np.all(r * r <= nn) and np.all((r + 1) * (r + 1) > nn)
+
+
+def test_i_gelu_close_to_float():
+    x = jnp.linspace(-4.0, 4.0, 513)
+    got = np.asarray(ibert.gelu_quantized(x, bits=8), np.float32)
+    want = np.asarray(jax.nn.gelu(x, approximate=False), np.float32)
+    assert np.abs(got - want).max() < 0.05
+
+
+def test_i_softmax_close_to_float():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 64)) * 3, jnp.float32)
+    got = np.asarray(ibert.softmax_quantized(x, bits=8, axis=-1))
+    want = np.asarray(jax.nn.softmax(x, axis=-1))
+    # 8-bit logit quantisation + i-exp poly: a few % absolute (I-BERT-level)
+    assert np.abs(got - want).max() < 0.05
+    # rows approximately normalised
+    np.testing.assert_allclose(got.sum(-1), 1.0, atol=0.05)
+
+
+def test_i_layernorm_close_to_float():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 256)) * 2 + 0.5, jnp.float32)
+    got = np.asarray(ibert.layernorm_quantized(x, bits=8))
+    mu = np.asarray(x).mean(-1, keepdims=True)
+    sd = np.asarray(x).std(-1, keepdims=True)
+    want = (np.asarray(x) - mu) / sd
+    assert np.abs(got - want).max() < 0.15
+
+
+def test_i_exp_monotone_nonpositive():
+    t = ibert.quantize(jnp.linspace(-8.0, 0.0, 100), bits=8)
+    q, s = ibert.i_exp(t.q, t.s)
+    vals = np.asarray(q, np.float64) * float(s)
+    assert np.all(np.diff(vals) >= -1e-6)
+    want = np.exp(np.linspace(-8.0, 0.0, 100))
+    assert np.abs(vals - want).max() < 0.05

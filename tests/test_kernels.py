@@ -1,0 +1,112 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitslice
+from repro.kernels.bitslice_mvm import (bitslice_mvm, bitslice_mvm_ref,
+                                        bitslice_mvm_from_weights_ref)
+from repro.kernels.bitslice_mvm.kernel import bitslice_mvm_pallas
+from repro.kernels.gf2_mvm import gf2_mvm, gf2_mvm_ref
+from repro.kernels.gf2_mvm.kernel import gf2_mvm_pallas
+
+
+# ---------------------------------------------------------------------------
+# bitslice_mvm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 128),
+                                   (128, 256, 384), (384, 384, 128)])
+@pytest.mark.parametrize("bits,slice_bits", [(8, 2), (8, 1), (4, 1), (8, 7)])
+def test_bitslice_kernel_vs_ref_shapes(m, k, n, bits, slice_bits):
+    rng = np.random.default_rng(m * 7 + k * 3 + n + bits)
+    qmax = (1 << (bits - 1)) - 1
+    x = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-qmax, qmax + 1, size=(k, n)), jnp.int32)
+    planes = bitslice.slice_planes_signed(w, bits, slice_bits).astype(jnp.int8)
+    got = bitslice_mvm_pallas(x, planes, bits_per_slice=slice_bits,
+                              interpret=True)
+    want = bitslice_mvm_ref(x, planes, bits_per_slice=slice_bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # end-to-end: equals the plain integer matmul
+    full = np.asarray(x, np.int64) @ np.asarray(w, np.int64)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), full)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       m=st.sampled_from([1, 5, 100, 130]),
+       k=st.sampled_from([17, 64, 200]),
+       n=st.sampled_from([9, 100, 129]))
+@settings(max_examples=12, deadline=None)
+def test_bitslice_ops_wrapper_padding(seed, m, k, n):
+    """The ops.py wrapper pads ragged shapes and un-pads the result."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-100, 101, size=(m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(-127, 128, size=(k, n)), jnp.int32)
+    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, interpret=True)
+    want = np.asarray(x, np.int64) @ np.asarray(w, np.int64)
+    assert got.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_bitslice_ops_batched_input():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-50, 51, size=(2, 3, 40)), jnp.int32)
+    w = jnp.asarray(rng.integers(-127, 128, size=(40, 24)), jnp.int32)
+    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, interpret=True)
+    want = np.einsum("abk,kn->abn", np.asarray(x, np.int64),
+                     np.asarray(w, np.int64))
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_bitslice_int32_accumulation_no_overflow_at_bounds():
+    """Worst-case magnitudes stay within int32 for K up to 16384."""
+    k = 512
+    x = jnp.full((128, k), 127, jnp.int8)
+    w = jnp.full((k, 128), 127, jnp.int32)
+    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, interpret=True)
+    assert int(got[0, 0]) == 127 * 127 * k
+
+
+# ---------------------------------------------------------------------------
+# gf2_mvm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 256),
+                                   (128, 384, 128)])
+def test_gf2_kernel_vs_ref(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    x = jnp.asarray(rng.integers(0, 2, size=(m, k)), jnp.int8)
+    a = jnp.asarray(rng.integers(0, 2, size=(k, n)), jnp.int8)
+    got = gf2_mvm_pallas(x, a, interpret=True)
+    want = gf2_mvm_ref(x, a)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert set(np.unique(np.asarray(got))) <= {0, 1}
+
+
+@given(seed=st.integers(0, 2**31 - 1), m=st.sampled_from([1, 7, 130]),
+       k=st.sampled_from([128, 200]), n=st.sampled_from([32, 128]))
+@settings(max_examples=10, deadline=None)
+def test_gf2_ops_wrapper(seed, m, k, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 2, size=(m, k)), jnp.int8)
+    a = jnp.asarray(rng.integers(0, 2, size=(k, n)), jnp.int8)
+    got = gf2_mvm(x, a, interpret=True)
+    want = (np.asarray(x, np.int64) @ np.asarray(a, np.int64)) & 1
+    assert got.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_gf2_linearity_property():
+    """GF(2) linearity: f(x ^ y) == f(x) ^ f(y)."""
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.integers(0, 2, size=(128, 128)), jnp.int8)
+    x = jnp.asarray(rng.integers(0, 2, size=(16, 128)), jnp.int8)
+    y = jnp.asarray(rng.integers(0, 2, size=(16, 128)), jnp.int8)
+    fx = np.asarray(gf2_mvm(x, a, interpret=True))
+    fy = np.asarray(gf2_mvm(y, a, interpret=True))
+    fxy = np.asarray(gf2_mvm(jnp.bitwise_xor(x, y), a, interpret=True))
+    np.testing.assert_array_equal(fxy, fx ^ fy)

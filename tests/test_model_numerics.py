@@ -1,0 +1,196 @@
+"""Numerical equivalence of the optimised model paths vs naive oracles:
+chunked online-softmax attention, MoE sort-based dispatch, Mamba chunked
+associative scan, mLSTM parallel vs recurrent form."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.config import MoEConfig, ModelConfig, PUMConfig
+from repro.models import attention, moe, ssm, xlstm
+
+
+def test_chunked_attention_matches_plain():
+    """Online-softmax chunked attention == plain causal attention."""
+    key = jax.random.PRNGKey(0)
+    b, s, kv, g, hd = 2, 300, 2, 2, 16
+    q = jax.random.normal(key, (b, s, kv, g, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    want = attention._plain_attention(q, k, v, mask, 0.0)
+    # force chunking with small chunks
+    old_q, old_k = attention.CHUNK_Q, attention.CHUNK_K
+    attention.CHUNK_Q = attention.CHUNK_K = 64
+    try:
+        got = attention._chunked_attention(q, k, v, 0, 0.0)
+    finally:
+        attention.CHUNK_Q, attention.CHUNK_K = old_q, old_k
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_with_cache_offset():
+    """Prefill-into-cache at a nonzero offset matches plain masked attn."""
+    key = jax.random.PRNGKey(3)
+    b, s, t, kv, g, hd = 1, 100, 160, 2, 1, 8
+    q = jax.random.normal(key, (b, s, kv, g, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, t, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, t, kv, hd))
+    off = 60
+    kpos = jnp.arange(t)
+    mask = kpos[None, :] <= (off + jnp.arange(s))[:, None]
+    want = attention._plain_attention(q, k, v, mask, 0.0)
+    old_q, old_k = attention.CHUNK_Q, attention.CHUNK_K
+    attention.CHUNK_Q = attention.CHUNK_K = 32
+    try:
+        got = attention._chunked_attention(q, k, v, off, 0.0)
+    finally:
+        attention.CHUNK_Q, attention.CHUNK_K = old_q, old_k
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _dense_moe_reference(p, x, cfg):
+    """Every expert processes every token; combine with top-k gates."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, -1)
+    vals, idx = jax.lax.top_k(probs, cfg.moe.top_k)
+    vals = vals / vals.sum(-1, keepdims=True)
+    outs = []
+    for e in range(cfg.moe.num_experts):
+        gate = jax.nn.silu(xf @ p["experts_wg"][e]) * (xf @ p["experts_wu"][e])
+        outs.append(gate @ p["experts_wd"][e])
+    outs = jnp.stack(outs, 1)                      # [T, E, D]
+    combined = jnp.zeros_like(xf)
+    for j in range(cfg.moe.top_k):
+        combined = combined + vals[:, j, None] * jnp.take_along_axis(
+            outs, idx[:, j, None, None].repeat(d, -1), 1)[:, 0]
+    return combined.reshape(b, s, d)
+
+
+def test_moe_dispatch_matches_dense_reference():
+    cfg = ModelConfig(d_model=32, d_ff=64,
+                      moe=MoEConfig(num_experts=4, top_k=2,
+                                    capacity_factor=4.0))
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    got, aux = moe.moe_ffn(p, x, cfg)
+    want = _dense_moe_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    assert float(aux["moe_lb"]) > 0.5          # ~1.0 at uniform routing
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor << 1 some tokens are dropped (output zeros
+    contribution), never NaN."""
+    cfg = ModelConfig(d_model=16, d_ff=32,
+                      moe=MoEConfig(num_experts=2, top_k=1,
+                                    capacity_factor=0.25))
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16))
+    got, _ = moe.moe_ffn(p, x, cfg)
+    assert bool(jnp.isfinite(got).all())
+    dense = _dense_moe_reference(p, x, cfg)
+    # some rows differ (dropped), but none explode
+    assert float(jnp.abs(got).max()) <= float(jnp.abs(dense).max()) * 2 + 1
+
+
+def test_mamba_chunked_scan_matches_sequential():
+    cfg = ModelConfig(d_model=16, ssm_state_dim=4, ssm_conv_width=3,
+                      ssm_expand=2)
+    p = ssm.init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 40, 16))
+    # train path (chunked associative scan)
+    y_train, _ = ssm.mamba(p, x, cfg, state=None)
+    # sequential path (prefill-into-state covers the same math step-wise)
+    st = ssm.make_ssm_state(cfg, 2)
+    y_seq, st2 = ssm.mamba(p, x, cfg, state=st)
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+    assert st2 is not None and bool(jnp.isfinite(st2["h"]).all())
+
+
+def test_mamba_decode_continues_prefill():
+    """Prefill state + single-step decode == full-sequence output."""
+    cfg = ModelConfig(d_model=16, ssm_state_dim=4, ssm_conv_width=3,
+                      ssm_expand=2)
+    p = ssm.init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 21, 16))
+    y_full, _ = ssm.mamba(p, x, cfg, state=None)
+    st = ssm.make_ssm_state(cfg, 1)
+    _, st = ssm.mamba(p, x[:, :20], cfg, state=st)
+    y_step, _ = ssm.mamba(p, x[:, 20:21], cfg, state=st)
+    np.testing.assert_allclose(np.asarray(y_step[:, 0]),
+                               np.asarray(y_full[:, 20]), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_mlstm_parallel_matches_recurrent():
+    cfg = ModelConfig(d_model=16, num_heads=2, num_kv_heads=2)
+    p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 16)) * 0.5
+    y_par, _ = xlstm.mlstm(p, x, cfg, state=None)
+    st = xlstm.make_mlstm_state(cfg, 1)
+    y_rec, _ = xlstm.mlstm(p, x, cfg, state=st)      # s>1 recurrent prefill
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_rec),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_mlstm_chunked_parallel():
+    """Chunked parallel form == unchunked (chunk > seq)."""
+    cfg = ModelConfig(d_model=16, num_heads=2, num_kv_heads=2)
+    p = xlstm.init_mlstm(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 50, 16)) * 0.5
+    q = k = None
+    y_big, _ = xlstm.mlstm(p, x, cfg)                # chunk=1024 > 50
+    # force small chunks through the internal function
+    inner, heads, hd = 2 * 16, 2, 16
+    import repro.models.xlstm as xm
+    qkv = x @ p["wqkv"]["w"]
+    qq, kk, vv = jnp.split(qkv, 3, -1)
+    qq = qq.reshape(2, 50, heads, hd)
+    kk = kk.reshape(2, 50, heads, hd) / np.sqrt(hd)
+    vv = vv.reshape(2, 50, heads, hd)
+    ip = (x @ p["wi"]["w"] + p["wi"]["b"]).astype(jnp.float32)
+    fp = (x @ p["wf"]["w"] + p["wf"]["b"]).astype(jnp.float32)
+    y1 = xm._mlstm_parallel(qq, kk, vv, ip, fp, chunk=1024)
+    y2 = xm._mlstm_parallel(qq, kk, vv, ip, fp, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_slstm_prefill_then_decode():
+    cfg = ModelConfig(d_model=16, num_heads=2, num_kv_heads=2)
+    p = xlstm.init_slstm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 9, 16))
+    y_full, _ = xlstm.slstm(p, x, cfg, state=None)
+    st = xlstm.make_slstm_state(cfg, 1)
+    _, st = xlstm.slstm(p, x[:, :8], cfg, state=st)
+    y_step, _ = xlstm.slstm(p, x[:, 8:9], cfg, state=st)
+    np.testing.assert_allclose(np.asarray(y_step[:, 0]),
+                               np.asarray(y_full[:, 8]), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_moe_grouped_dispatch_matches_global():
+    """Group-local dispatch == global dispatch at ample capacity."""
+    from repro.models.moe import set_grouped_dispatch
+    cfg = ModelConfig(d_model=32, d_ff=64,
+                      moe=MoEConfig(num_experts=4, top_k=2,
+                                    capacity_factor=8.0))
+    p = moe.init_moe(jax.random.PRNGKey(5), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 8, 32))
+    y_global, _ = moe.moe_ffn(p, x, cfg)
+    set_grouped_dispatch(True)
+    try:
+        y_grouped, _ = moe.moe_ffn(p, x, cfg)
+    finally:
+        set_grouped_dispatch(False)
+    np.testing.assert_allclose(np.asarray(y_grouped),
+                               np.asarray(y_global), rtol=2e-3, atol=2e-3)
