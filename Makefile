@@ -1,0 +1,15 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-dist quickstart
+
+# tier-1 verify; test_distributed.py spawns its own subprocesses with
+# XLA_FLAGS=--xla_force_host_platform_device_count=8
+test:
+	$(PY) -m pytest -x -q
+
+test-dist:
+	$(PY) -m pytest -q tests/test_distributed.py tests/test_dist_unit.py
+
+quickstart:
+	$(PY) examples/quickstart.py

@@ -1,0 +1,10 @@
+"""Distribution layer: sharding specs, compressed collectives, pipelining.
+
+``repro.dist`` is the one place that knows how arrays are laid out across
+the mesh.  Models only ever call :func:`repro.dist.sharding.shard_act`
+(a no-op outside a mesh), so every model file stays topology-agnostic;
+the launcher picks specs via :func:`repro.dist.sharding.param_specs` /
+:func:`repro.dist.sharding.decode_state_specs`; the trainer optionally
+routes gradients through :mod:`repro.dist.compress`.
+"""
+from repro.dist import compress, pipeline, sharding  # noqa: F401

@@ -1,0 +1,232 @@
+"""Sharding policy: the single source of truth for array layouts.
+
+Three ingredients:
+
+* an *active mesh* (module state, entered with :func:`use_mesh`) so model
+  code can place sharding constraints without threading a mesh argument
+  through every layer — :func:`shard_act` is a no-op when no mesh is
+  active, which keeps single-device tests and eager debugging untouched;
+* *parameter specs* (:func:`param_specs`): megatron-style tensor
+  parallelism over the ``model`` axis plus optional ZeRO-3/FSDP sharding
+  over the ``data`` axis, derived from leaf names and shapes;
+* *decode-state specs* (:func:`decode_state_specs`): KV caches shard
+  batch over ``data`` and KV heads over ``model`` when the head count
+  divides the axis; the batch-1 long-context regime instead shards the
+  sequence dimension over every mesh axis (context parallelism — the
+  only dimension with any parallelism left at batch 1).
+
+Every constraint carries a divisibility guard: an axis that does not
+divide the corresponding dimension is dropped (never an error), so the
+same policy serves the (2, 2) test mesh and the (2, 16, 16) production
+mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ShardingConfig
+
+_STATE = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# Active-mesh state
+# ---------------------------------------------------------------------------
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Make ``mesh`` the active mesh for shard_act / param_specs guards."""
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def _axis_sizes(mesh: Mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def _data_axes(mesh: Mesh):
+    """The data-parallel axes: ``pod`` acts as extra DP when present."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+# ---------------------------------------------------------------------------
+# Residual-stream constraint mode (hillclimb knob)
+# ---------------------------------------------------------------------------
+
+_SEQ_MODE = "seq"          # "seq" | "hidden" | "batch"
+
+
+def set_seq_shard(mode) -> None:
+    """Set the residual-stream constraint mode.
+
+    Accepts the ``ShardingConfig.seq_shard`` bool (True -> sequence
+    parallel, False -> batch only) or an explicit mode string.
+    """
+    global _SEQ_MODE
+    if isinstance(mode, bool):
+        mode = "seq" if mode else "batch"
+    assert mode in ("seq", "hidden", "batch"), mode
+    _SEQ_MODE = mode
+
+
+def residual_spec() -> Tuple[Any, Any, Any]:
+    """shard_act axes for the [B, S, D] residual stream."""
+    return {"seq": ("data", "model", None),
+            "hidden": ("data", None, "model"),
+            "batch": ("data", None, None)}[_SEQ_MODE]
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+def _guard(spec: Sequence[Any], shape: Sequence[int], mesh: Mesh,
+           ) -> P:
+    """Drop spec axes that are absent from the mesh or do not divide the
+    corresponding dimension; expand "data" to the full DP axis group."""
+    sizes = _axis_sizes(mesh)
+    out = []
+    for dim, a in zip(shape, spec):
+        if a == "data":
+            a = _data_axes(mesh)
+        axes = (a,) if isinstance(a, str) else tuple(a or ())
+        if not axes or any(ax not in sizes for ax in axes):
+            out.append(None)
+            continue
+        n = int(np.prod([sizes[ax] for ax in axes]))
+        out.append(a if n > 0 and dim % n == 0 else None)
+    return P(*out)
+
+
+def shard_act(x: jax.Array, *axes) -> jax.Array:
+    """Sharding constraint on an activation; no-op without an active mesh.
+
+    ``axes`` names one mesh axis (or None, or a tuple of axes) per array
+    dimension; "data" expands to ("pod", "data") on multi-pod meshes.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = _guard(axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+# leaf names whose 2D weight is row-parallel (contracted dim carries the
+# model-sharded activation, so the *input* dim goes over ``model``)
+_ROW_PARALLEL = ("wo", "wd", "out_proj", "down")
+# leaf names kept replicated on the model axis (tiny output dims)
+_REPLICATED_OUT = ("router", "wi", "wf")
+
+
+def _leaf_spec(path: Tuple[str, ...], shape: Sequence[int],
+               scfg: ShardingConfig) -> P:
+    fsdp = "data" if scfg.fsdp else None
+    stacked = "blocks" in path
+    core = shape[1:] if stacked else shape
+    name = next((p for p in reversed(path) if p not in ("w", "b")), "")
+
+    if len(core) <= 1:
+        spec: Tuple[Any, ...] = (None,) * len(core)
+    elif name == "embed":
+        spec = ("model", fsdp)
+    elif name == "lm_head":
+        spec = (fsdp, "model")
+    elif name.startswith("experts_"):
+        # expert-parallel over model; FSDP over the first matmul dim
+        spec = ("model", fsdp) + (None,) * (len(core) - 2)
+    elif any(name == n or name.endswith(n) for n in _ROW_PARALLEL):
+        spec = ("model", fsdp) + (None,) * (len(core) - 2)
+    elif any(name == n for n in _REPLICATED_OUT):
+        spec = (fsdp,) + (None,) * (len(core) - 1)
+    else:
+        # column-parallel default: output dim over model, input over data
+        spec = (fsdp,) + (None,) * (len(core) - 2) + ("model",)
+    if stacked:
+        spec = (None,) + spec
+    mesh = current_mesh()
+    if mesh is not None:
+        return _guard(spec, shape, mesh)
+    return P(*spec)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def param_specs(params: Any, scfg: Optional[ShardingConfig] = None) -> Any:
+    """PartitionSpec pytree for a parameter tree (arrays or ShapeDtype-
+    Structs).  ``scfg`` defaults to :class:`ShardingConfig` defaults
+    (FSDP on), matching the test-suite arity ``param_specs(params)``."""
+    scfg = scfg if scfg is not None else ShardingConfig()
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: _leaf_spec(tuple(_key_str(k) for k in kp),
+                                    leaf.shape, scfg),
+        params)
+
+
+def named_shardings(mesh: Mesh, specs: Any) -> Any:
+    """Map a PartitionSpec pytree to NamedShardings on ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Decode-state specs
+# ---------------------------------------------------------------------------
+
+def decode_state_specs(state: Any, mesh: Mesh) -> Any:
+    """Specs for the decode-state tree (group-stacked per-block states).
+
+    Rank-5 leaves are KV caches [groups, batch, seq, kv_heads, head_dim]:
+      * batch > 1: batch over ``data``; kv_heads over ``model`` only when
+        the head count divides the axis (head-divisibility rule);
+      * batch == 1 (long-context serving): no batch parallelism exists, so
+        the *sequence* dim shards over every mesh axis instead.
+    Recurrent states (rank < 5) shard batch over ``data``; everything
+    else stays replicated.
+    """
+    sizes = _axis_sizes(mesh)
+    model_n = sizes.get("model", 1)
+    all_axes = tuple(mesh.axis_names)
+    total = int(np.prod(mesh.devices.shape))
+
+    def leaf(s) -> P:
+        shape = s.shape
+        if len(shape) == 5:                      # [G, B, T, KV, hd]
+            _, b, t, kv, _ = shape
+            if b == 1:
+                seq = all_axes if t % total == 0 else None
+                return P(None, None, seq, None, None)
+            heads = "model" if ("model" in sizes and kv % model_n == 0) \
+                else None
+            return _guard((None, "data", None, heads, None), shape, mesh)
+        if len(shape) >= 2:                      # [G, B, ...] recurrent
+            return _guard((None, "data") + (None,) * (len(shape) - 2),
+                          shape, mesh)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map(leaf, state)

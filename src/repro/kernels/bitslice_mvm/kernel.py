@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 
 def _bitslice_mvm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_slices: int,
                          bits_per_slice: int, k_steps: int):
@@ -91,7 +93,7 @@ def bitslice_mvm_pallas(x: jax.Array, w_planes: jax.Array, *,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_planes)

@@ -1,0 +1,18 @@
+"""Version-compat shims for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+around 0.5; this repo pins neither direction, so both kernels route
+through :func:`tpu_compiler_params` which resolves whichever name the
+installed jax provides.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params under either jax naming."""
+    return CompilerParams(**kwargs)

@@ -1,0 +1,114 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+This environment cannot install the real package, so ``conftest.py``
+registers this module under the name ``hypothesis`` when (and only when)
+the real one is absent.  It supports exactly the surface the suite uses:
+
+    @given(seed=st.integers(0, 2**31 - 1), m=st.sampled_from([1, 2]))
+    @settings(max_examples=10, deadline=None)
+    def test_x(seed, m): ...
+
+Draws are *fixed*: each strategy samples from a numpy Generator seeded
+by the test's qualified name, so every run (and every CI machine) sees
+the identical example sequence — no shrinking, no database, no flakes.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-repro-shim"
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=2**31 - 1) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(elements) -> SearchStrategy:
+        elements = list(elements)
+        return SearchStrategy(
+            lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return strategies.sampled_from([False, True])
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_ignored) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator recording max_examples; other knobs are accepted and
+    ignored (deadline, derandomize, ...)."""
+    def deco(fn):
+        fn._shim_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    assert not arg_strategies, \
+        "shim supports keyword-form @given only (as used by this suite)"
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_shim_settings", None) \
+                or getattr(fn, "_shim_settings",
+                           {"max_examples": _DEFAULT_MAX_EXAMPLES})
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(cfg["max_examples"]):
+                drawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, **drawn, **kwargs)
+        # expose settings slot in case @settings is applied above @given
+        wrapper._shim_settings = getattr(fn, "_shim_settings", None)
+        # hide the drawn params from pytest's fixture resolution (the
+        # real hypothesis does the same): present a signature holding
+        # only the *remaining* params, and drop __wrapped__ so inspect
+        # doesn't look through to the original function
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+class HealthCheck:
+    too_slow = data_too_large = filter_too_much = all = object()
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass

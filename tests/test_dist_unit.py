@@ -1,0 +1,117 @@
+"""Direct unit tests for repro.dist (no subprocess, 1 device).
+
+The subprocess tests in test_distributed.py prove end-to-end behavior on
+8 forced devices; these pin the API contract pieces individually."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.config import ShardingConfig
+from repro.dist import compress
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_test_mesh
+from repro.models import lm
+
+
+def test_param_specs_default_arity():
+    cfg = configs.get_reduced("glm4-9b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    specs = shd.param_specs(params)
+    # same tree structure (PartitionSpec leaves)
+    s1 = jax.tree_util.tree_structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    s2 = jax.tree_util.tree_structure(params)
+    assert s1 == s2
+    # default scfg has FSDP on: stacked column-parallel weight
+    wg = specs["blocks"][0]["mlp"]["wg"]["w"]
+    assert wg == P(None, "data", "model"), wg
+    # row-parallel attention output projection
+    wo = specs["blocks"][0]["attn"]["wo"]["w"]
+    assert wo == P(None, "model", "data"), wo
+    # norm scales stay replicated
+    assert specs["final_norm"]["scale"] == P(None)
+
+
+def test_param_specs_scfg_arity():
+    cfg = configs.get_reduced("glm4-9b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    specs = shd.param_specs(params, ShardingConfig(fsdp=False))
+    wg = specs["blocks"][0]["mlp"]["wg"]["w"]
+    assert wg == P(None, None, "model"), wg
+    wo = specs["blocks"][0]["attn"]["wo"]["w"]
+    assert wo == P(None, "model", None), wo
+
+
+def test_shard_act_noop_without_mesh():
+    x = jnp.ones((4, 8, 16))
+    assert shd.current_mesh() is None
+    y = shd.shard_act(x, "data", "model", None)
+    assert y is x
+
+
+def test_shard_act_divisibility_guard():
+    mesh = make_test_mesh((1,), ("data",))
+    with shd.use_mesh(mesh):
+        # 3 not divisible by ... axis size 1 divides everything; spec
+        # referencing an absent axis is dropped instead of erroring
+        x = jnp.ones((3, 5))
+        y = shd.shard_act(x, "model", "data")
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    assert shd.current_mesh() is None
+
+
+def test_use_mesh_restores_on_exception():
+    mesh = make_test_mesh((1,), ("data",))
+    with pytest.raises(RuntimeError):
+        with shd.use_mesh(mesh):
+            assert shd.current_mesh() is mesh
+            raise RuntimeError("boom")
+    assert shd.current_mesh() is None
+
+
+def test_residual_spec_modes():
+    try:
+        shd.set_seq_shard("hidden")
+        assert shd.residual_spec() == ("data", None, "model")
+        shd.set_seq_shard(False)
+        assert shd.residual_spec() == ("data", None, None)
+        shd.set_seq_shard(True)
+        assert shd.residual_spec() == ("data", "model", None)
+    finally:
+        shd.set_seq_shard("seq")
+
+
+def test_compressed_psum_single_device_error_bound():
+    mesh = make_test_mesh((1,), ("data",))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 256)), jnp.float32)
+    got = compress.compressed_psum(x, mesh, "data")
+    # sum over one shard == identity up to int8 quantisation error:
+    # |err| <= scale/2 with scale = max|x| / 127
+    bound = float(jnp.max(jnp.abs(x))) / 127.0
+    err = float(jnp.abs(got - x).max())
+    assert err <= bound + 1e-6, (err, bound)
+
+
+def test_ef_compression_is_lossless_in_aggregate():
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)}
+    res = compress.zeros_like_residual(g)
+    dec, res = compress.ef_compress_grads(g, res)
+    # one step: dec + residual reconstructs the gradient exactly
+    np.testing.assert_allclose(np.asarray(dec["w"] + res["w"]),
+                               np.asarray(g["w"]), rtol=1e-6, atol=1e-6)
+    # quantisation error bounded by half an int8 step
+    bound = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.abs(res["w"]).max()) <= bound + 1e-6
+
+
+def test_decode_state_specs_non_divisible_heads_stay_replicated():
+    mesh = make_test_mesh((1,), ("data",))  # no model axis at all
+    cfg = configs.get_reduced("glm4-9b")
+    st = lm.init_state(cfg, 4, 32, abstract=True)
+    specs = shd.decode_state_specs(st, mesh)
+    assert specs[0]["k"] == P(None, "data", None, None, None)
