@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist quickstart
+.PHONY: test test-dist quickstart bench bench-smoke
 
 # tier-1 verify; test_distributed.py spawns its own subprocesses with
 # XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -13,3 +13,12 @@ test-dist:
 
 quickstart:
 	$(PY) examples/quickstart.py
+
+# full microbenchmarks; writes BENCH.json ({name: {value, unit}}) next to
+# the CSV on stdout
+bench:
+	$(PY) -m benchmarks.run --only micro
+
+# CI smoke run: same code paths on tiny shapes
+bench-smoke:
+	$(PY) -m benchmarks.run --only micro --small

@@ -1,5 +1,9 @@
 """Wall-clock microbenchmarks of the functional JAX paths (CPU here; the
-same harness runs on TPU).  Reports µs/call for the public ops."""
+same harness runs on TPU).  Reports µs/call for the public ops.
+
+Every bench takes ``small=True`` for the CI smoke run: tiny shapes, few
+iterations — exercising the same code paths in seconds.
+"""
 from __future__ import annotations
 
 import time
@@ -21,12 +25,12 @@ def _time(fn: Callable[[], object], iters: int = 5, warmup: int = 2) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def bench_aes_bulk() -> List[Row]:
+def bench_aes_bulk(small: bool = False) -> List[Row]:
     from repro.apps import aes_app
     rng = np.random.default_rng(0)
     key = rng.integers(0, 256, size=(16,), dtype=np.uint8)
     rows: List[Row] = []
-    for n in (1024, 16384):
+    for n in (64,) if small else (1024, 16384):
         pts = jnp.asarray(rng.integers(0, 256, size=(n, 16), dtype=np.uint8))
         us = _time(lambda: aes_app.aes_encrypt(pts, key))
         rows.append((f"aes_encrypt/bulk{n}", us, "us_per_call"))
@@ -34,11 +38,13 @@ def bench_aes_bulk() -> List[Row]:
     return rows
 
 
-def bench_bitslice_mvm() -> List[Row]:
+def bench_bitslice_mvm(small: bool = False) -> List[Row]:
     from repro.kernels.bitslice_mvm import bitslice_mvm
     rng = np.random.default_rng(1)
     rows: List[Row] = []
-    for (m, k, n) in [(128, 512, 512), (512, 1024, 1024)]:
+    shapes = [(8, 128, 128)] if small else [(128, 512, 512),
+                                            (512, 1024, 1024)]
+    for (m, k, n) in shapes:
         x = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int32)
         w = jnp.asarray(rng.integers(-127, 128, size=(k, n)), jnp.int32)
         us = _time(lambda: bitslice_mvm(x, w, weight_bits=8,
@@ -47,11 +53,11 @@ def bench_bitslice_mvm() -> List[Row]:
     return rows
 
 
-def bench_gf2_mvm() -> List[Row]:
+def bench_gf2_mvm(small: bool = False) -> List[Row]:
     from repro.kernels.gf2_mvm import gf2_mvm
     rng = np.random.default_rng(2)
     rows: List[Row] = []
-    for m in (1024, 8192):
+    for m in (128,) if small else (1024, 8192):
         x = jnp.asarray(rng.integers(0, 2, size=(m, 128)), jnp.int8)
         a = jnp.asarray(rng.integers(0, 2, size=(128, 128)), jnp.int8)
         us = _time(lambda: gf2_mvm(x, a), iters=3)
@@ -59,34 +65,75 @@ def bench_gf2_mvm() -> List[Row]:
     return rows
 
 
-def bench_ibert() -> List[Row]:
+def bench_ibert(small: bool = False) -> List[Row]:
     from repro.core import ibert
     rng = np.random.default_rng(3)
-    x = jnp.asarray(rng.normal(size=(64, 1024)), jnp.float32)
+    d = 128 if small else 1024
+    x = jnp.asarray(rng.normal(size=(64, d)), jnp.float32)
     rows: List[Row] = []
     sm = jax.jit(lambda t: ibert.softmax_quantized(t, 8))
     gl = jax.jit(lambda t: ibert.gelu_quantized(t, 8))
     ln = jax.jit(lambda t: ibert.layernorm_quantized(t, 8))
-    rows.append(("ibert/softmax_64x1024", _time(lambda: sm(x)), "us_per_call"))
-    rows.append(("ibert/gelu_64x1024", _time(lambda: gl(x)), "us_per_call"))
-    rows.append(("ibert/layernorm_64x1024", _time(lambda: ln(x)),
+    rows.append((f"ibert/softmax_64x{d}", _time(lambda: sm(x)),
+                 "us_per_call"))
+    rows.append((f"ibert/gelu_64x{d}", _time(lambda: gl(x)), "us_per_call"))
+    rows.append((f"ibert/layernorm_64x{d}", _time(lambda: ln(x)),
                  "us_per_call"))
     return rows
 
 
-def bench_pum_linear() -> List[Row]:
+def bench_pum_linear(small: bool = False) -> List[Row]:
+    """Serving path (prepacked weights, ``inference=True``) for the
+    quantised modes — the hot path this harness tracks — plus the QAT
+    (per-call quant + STE shadow matmul) rows for reference."""
+    import dataclasses
+
     from repro.config import PUMConfig
+    from repro.core import prepack
     from repro.core.pum_linear import pum_linear
     rng = np.random.default_rng(4)
-    x = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
-    w = jnp.asarray(rng.normal(size=(512, 512)) * 0.05, jnp.float32)
+    m, k, n = (32, 64, 64) if small else (256, 512, 512)
+    shape = f"{m}x{k}x{n}"
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
     rows: List[Row] = []
-    for mode in ("bf16", "int8", "pum"):
-        cfg = PUMConfig(mode=mode)
-        f = jax.jit(lambda a, b: pum_linear(a, b, cfg))
-        rows.append((f"pum_linear/{mode}_256x512x512", _time(lambda: f(x, w)),
-                     "us_per_call"))
+    f = jax.jit(lambda a, b: pum_linear(a, b, PUMConfig(mode="bf16")))
+    rows.append((f"pum_linear/bf16_{shape}", _time(lambda: f(x, w)),
+                 "us_per_call"))
+    for mode in ("int8", "pum"):
+        cfg = PUMConfig(mode=mode, inference=True)
+        packed = prepack.pack_weight(w, cfg)
+        f = jax.jit(lambda a, b, c=cfg: pum_linear(a, b, c))
+        rows.append((f"pum_linear/{mode}_{shape}",
+                     _time(lambda: f(x, packed)), "us_per_call"))
+        qat = dataclasses.replace(cfg, inference=False)
+        fq = jax.jit(lambda a, b, c=qat: pum_linear(a, b, c))
+        rows.append((f"pum_linear/{mode}_qat_{shape}",
+                     _time(lambda: fq(x, w)), "us_per_call"))
     return rows
+
+
+def bench_serve_decode(small: bool = False) -> List[Row]:
+    """Fused-scan decode vs the per-token loop oracle (tiny model; the
+    delta is per-token dispatch + redundant per-call weight work)."""
+    from repro.config import small_test_config
+    from repro.models import lm
+    from repro.serve import ServeEngine
+
+    steps = 8 if small else 64
+    cfg = small_test_config()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=8 + steps + 1)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    us_scan = _time(lambda: eng.generate(prompt, steps, use_scan=True),
+                    iters=3, warmup=1)
+    us_loop = _time(lambda: eng.generate_loop(prompt, steps),
+                    iters=1 if small else 2, warmup=1)
+    return [(f"serve_decode/scan_{steps}tok", us_scan, "us_per_call"),
+            (f"serve_decode/loop_{steps}tok", us_loop, "us_per_call"),
+            (f"serve_decode/scan_speedup_{steps}tok", us_loop / us_scan,
+             "x")]
 
 
 ALL_MICRO = {
@@ -95,4 +142,5 @@ ALL_MICRO = {
     "gf2_mvm": bench_gf2_mvm,
     "ibert": bench_ibert,
     "pum_linear": bench_pum_linear,
+    "serve_decode": bench_serve_decode,
 }

@@ -1,44 +1,39 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
-Prints ``name,value,unit`` CSV rows:
+Prints ``name,value,unit`` CSV rows and writes the same rows to a
+machine-readable ``BENCH.json`` (schema ``{name: {"value": v, "unit": u}}``)
+so the perf trajectory is tracked across PRs:
+
   * paper-figure regenerations (cost model; Figs. 7, 13-18) with the
     paper's claimed values attached for comparison;
-  * wall-clock microbenchmarks of the functional JAX paths;
+  * wall-clock microbenchmarks of the functional JAX paths
+    (``--small`` shrinks shapes/iters for the CI smoke run);
   * the dry-run roofline summary, if the table file produced by
     ``repro.launch.dryrun`` exists.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="", help="comma list: fig07,...,micro")
-    ap.add_argument("--skip-micro", action="store_true")
-    args = ap.parse_args()
-
+def collect(only: set, skip_micro: bool, small: bool) -> list:
     from benchmarks import microbench, paper_figures
 
-    only = set(filter(None, args.only.split(",")))
-    print("name,value,unit")
-
+    rows: list = []
     for name, fn in paper_figures.ALL_FIGURES.items():
         if only and name not in only:
             continue
-        for row in fn():
-            print(f"{row[0]},{row[1]:.6g},{row[2]}")
+        rows.extend(fn())
 
-    if not args.skip_micro and (not only or "micro" in only):
+    if not skip_micro and (not only or "micro" in only):
         for name, fn in microbench.ALL_MICRO.items():
-            for row in fn():
-                print(f"{row[0]},{row[1]:.6g},{row[2]}")
+            rows.extend(fn(small=small))
 
     if not only or "noise" in only:
         from benchmarks import noise_accuracy
-        for row in noise_accuracy.sweep():
-            print(f"{row[0]},{row[1]:.6g},{row[2]}")
+        rows.extend(noise_accuracy.sweep())
 
     # roofline summary (written by repro.launch.dryrun, if present)
     table = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -46,7 +41,44 @@ def main() -> None:
     if (not only or "roofline" in only) and os.path.exists(table):
         with open(table) as f:
             for line in f.read().strip().splitlines()[1:]:
-                print(f"roofline/{line}")
+                parts = line.split(",")
+                if len(parts) >= 3:
+                    try:
+                        rows.append((f"roofline/{parts[0]}",
+                                     float(parts[1]), parts[2]))
+                    except ValueError:
+                        pass
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list: fig07,...,micro")
+    ap.add_argument("--skip-micro", action="store_true")
+    ap.add_argument("--small", action="store_true",
+                    help="tiny shapes / few iters (CI smoke run)")
+    ap.add_argument("--json", default=None,
+                    help="path for the machine-readable results "
+                         "('' disables; default BENCH.json, or "
+                         "BENCH.small.json under --small so smoke runs "
+                         "never clobber the tracked full-shape record)")
+    args = ap.parse_args()
+    if args.json is None:
+        args.json = "BENCH.small.json" if args.small else "BENCH.json"
+
+    only = set(filter(None, args.only.split(",")))
+    rows = collect(only, args.skip_micro, args.small)
+
+    print("name,value,unit")
+    for name, value, unit in rows:
+        print(f"{name},{value:.6g},{unit}")
+
+    if args.json:
+        payload = {name: {"value": float(value), "unit": unit}
+                   for name, value, unit in rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
 
 
 if __name__ == "__main__":

@@ -52,6 +52,22 @@ def encoder_init(key, *, layers: int = 4, d_model: int = 256,
     return p
 
 
+def encoder_prepack(p: Params, pum: PUMConfig) -> Params:
+    """Pack every projection weight once for serving (this app stores its
+    weights as bare arrays, so the generic ``{"w": ...}`` tree walk in
+    ``prepack_params`` does not apply — pack each named matrix directly).
+    ``pum_linear`` accepts the resulting ``PackedLinear`` in place of the
+    raw weight."""
+    from repro.core import prepack
+    if pum.mode == "bf16":
+        return p
+    packed = dict(p)
+    packed["layers"] = [
+        {name: prepack.pack_weight(wm, pum) for name, wm in lp.items()}
+        for lp in p["layers"]]
+    return packed
+
+
 def _softmax(x, pum: PUMConfig):
     if pum.ibert:
         return ibert.softmax_quantized(x, bits=8, axis=-1)

@@ -74,6 +74,10 @@ class PUMConfig:
     noise: NoiseConfig = field(default_factory=NoiseConfig)
     use_kernel: bool = False           # route through the Pallas kernel
     ibert: bool = False                # integer-only nonlinearities (DCE role)
+    # serving fast path: skip the dense bf16 shadow matmul + STE entirely
+    # (no gradients flow; forward values are identical to the QAT forward).
+    # Weights prepacked via ``repro.core.prepack`` imply this per-layer.
+    inference: bool = False
 
     def __post_init__(self):
         assert self.mode in ("bf16", "int8", "pum"), self.mode

@@ -130,8 +130,53 @@ def slice_bits_input(x: jax.Array, bits: int, signed: bool = True,
 
 
 # ---------------------------------------------------------------------------
+# Exact integer matmul (the serving fast path's contraction)
+# ---------------------------------------------------------------------------
+
+def int_matmul(x_q: jax.Array, w_q: jax.Array, *, x_bound: int = 127,
+               w_bound: int = 127) -> jax.Array:
+    """Exact ``x_q @ w_q`` -> int32, via the fastest exact path.
+
+    x_q: [..., K]; w_q: [K, N]; values bounded by ``x_bound``/``w_bound``
+    in magnitude (both must fit int8).  On TPU the MXU's native
+    int8xint8->int32 product is used.  Elsewhere (CPU/GPU validation) an
+    f32 contraction is used when every partial sum provably fits f32's
+    24-bit integer window — |sum| <= K * x_bound * w_bound < 2^24 — which
+    is bit-exact and far faster than XLA's emulated integer matmul; K too
+    large falls back to the int8 dot.
+    """
+    assert x_bound <= 127 and w_bound <= 127, (x_bound, w_bound)
+    k = x_q.shape[-1]
+    dims = (((x_q.ndim - 1,), (0,)), ((), ()))
+    if (jax.default_backend() != "tpu"
+            and k * x_bound * w_bound < (1 << 24)):
+        # HIGHEST precision: the exactness argument needs true f32
+        # multiplies (GPU TF32 would truncate 14-bit partial products)
+        acc = jax.lax.dot_general(x_q.astype(jnp.float32),
+                                  w_q.astype(jnp.float32),
+                                  dimension_numbers=dims,
+                                  preferred_element_type=jnp.float32,
+                                  precision=jax.lax.Precision.HIGHEST)
+        return acc.astype(jnp.int32)
+    return jax.lax.dot_general(x_q.astype(jnp.int8), w_q.astype(jnp.int8),
+                               dimension_numbers=dims,
+                               preferred_element_type=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # Exact bit-sliced matmul (oracle for the Pallas kernel)
 # ---------------------------------------------------------------------------
+
+def bitsliced_matmul_planes(x_q: jax.Array, planes: jax.Array,
+                            bits_per_slice: int) -> jax.Array:
+    """Per-plane matmuls + shift-and-add over pre-sliced planes [S, K, N]."""
+    def one_plane(p):
+        return jnp.matmul(x_q.astype(jnp.int32), p.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+
+    partials = jax.vmap(one_plane)(planes)                          # [S,...,N]
+    return combine_planes(partials, bits_per_slice)
+
 
 def bitsliced_matmul_exact(x_q: jax.Array, w_q: jax.Array, weight_bits: int,
                            bits_per_slice: int) -> jax.Array:
@@ -142,13 +187,7 @@ def bitsliced_matmul_exact(x_q: jax.Array, w_q: jax.Array, weight_bits: int,
     this function exists to mirror the kernel's dataflow.
     """
     planes = slice_planes_signed(w_q, weight_bits, bits_per_slice)  # [S,K,N]
-
-    def one_plane(p):
-        return jnp.matmul(x_q.astype(jnp.int32), p.astype(jnp.int32),
-                          preferred_element_type=jnp.int32)
-
-    partials = jax.vmap(one_plane)(planes)                          # [S,...,N]
-    return combine_planes(partials, bits_per_slice)
+    return bitsliced_matmul_planes(x_q, planes, bits_per_slice)
 
 
 def pack_unpack_roundtrip(q: jax.Array, weight_bits: int,

@@ -1,0 +1,162 @@
+"""Weight prepacking — the software analogue of crossbar programming.
+
+The paper's efficiency argument rests on weights being programmed into the
+crossbars **once** and then reused across MVMs (PUMA-style explicit
+programming phase).  The seed code instead re-quantised and re-bit-sliced
+every weight on every forward call.  This module performs that work once,
+at model-load time:
+
+  * :class:`PackedLinear` — an immutable pytree holding a linear weight in
+    its *programmed* form: int8 differential bit-planes ``[..., S, K, N]``
+    (the crossbar image consumed by the Pallas kernel and the noise sim),
+    the recombined quantised weight ``[..., K, N]`` int8 (shift-and-add
+    performed once at programming time — the fast exact path), and the
+    dequantisation scale.
+  * :func:`prepack_params` / :func:`unpack_params` — walk a model's param
+    tree and convert every linear weight (any ``{"w": ...}`` leaf dict, the
+    layout produced by ``layers.linear_init``) to/from packed form.
+  * :func:`pack_weight` / :func:`unpack_weight` — single-array versions for
+    app wrappers whose weights are bare arrays (e.g. ``apps.encoder_app``).
+
+``pum_linear`` accepts a :class:`PackedLinear` anywhere it accepts a raw
+float weight; the packed forward skips quantisation, slicing, and the
+dense bf16 shadow matmul, and is bit-exact to the raw-weight QAT forward.
+
+Stacked weights (leading group/layer dims, as produced by the vmap'd block
+init in ``models.lm``) pack per-slice-of-the-leading-dims, so scanning /
+indexing the packed tree along those dims yields exactly what packing the
+unstacked weight would have.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import PUMConfig
+from repro.core import bitslice
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedLinear:
+    """A linear weight in programmed (crossbar) form.
+
+    planes — int8 ``[..., S, K, N]`` net differential planes
+             (``slice_planes_signed`` layout, slice axis third-from-last so
+             leading stack dims scan/index naturally); ``None`` in int8
+             mode (single-plane special case — the plane *is* ``wq``).
+    wq     — int8 ``[..., K, N]`` recombined quantised weight
+             (= ``combine_planes(planes)``; shift-and-add done at
+             programming time).
+    scale  — f32 dequantisation scale: ``[..., 1, 1]`` per-tensor (pum) or
+             ``[..., 1, N]`` per-out-channel (int8).
+    """
+    planes: Optional[jax.Array]
+    wq: jax.Array
+    scale: jax.Array
+    mode: str = "pum"
+    weight_bits: int = 8
+    bits_per_slice: int = 2
+
+    # -- pytree protocol: arrays are children, quant metadata is static ----
+    def tree_flatten(self):
+        return ((self.planes, self.wq, self.scale),
+                (self.mode, self.weight_bits, self.bits_per_slice))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        planes, wq, scale = children
+        mode, weight_bits, bits_per_slice = aux
+        return cls(planes, wq, scale, mode, weight_bits, bits_per_slice)
+
+    # -- array-like surface so shape probes on params keep working --------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.wq.shape
+
+    @property
+    def ndim(self) -> int:
+        return self.wq.ndim
+
+
+def pack_weight(w: jax.Array, cfg: PUMConfig) -> PackedLinear:
+    """Quantise + bit-slice a float weight ``[..., K, N]`` once.
+
+    Scales match what the per-call (QAT) path computes, so the packed
+    forward is bit-exact to it: per-tensor for ``pum`` (per element of any
+    leading stack dims), per-out-channel for ``int8``.
+    """
+    assert cfg.mode in ("int8", "pum"), cfg.mode
+    assert cfg.weight_bits <= 8, (
+        f"packed weights are stored int8; weight_bits={cfg.weight_bits} "
+        "does not fit (the per-call QAT path handles wider weights)")
+    w32 = w.astype(jnp.float32)
+    if cfg.mode == "int8":
+        q, s = bitslice.quantize_symmetric(w32, 8, axis=w.ndim - 2)
+        return PackedLinear(None, q.astype(jnp.int8), s, "int8", 8, 1)
+    axes = (w.ndim - 2, w.ndim - 1)
+    q, s = bitslice.quantize_symmetric(w32, cfg.weight_bits, axis=axes)
+    planes = bitslice.slice_planes_signed(q, cfg.weight_bits,
+                                          cfg.bits_per_slice)
+    planes = jnp.moveaxis(planes, 0, -3)          # [..., S, K, N]
+    return PackedLinear(planes.astype(jnp.int8), q.astype(jnp.int8), s,
+                        "pum", cfg.weight_bits, cfg.bits_per_slice)
+
+
+def unpack_weight(p: PackedLinear) -> jax.Array:
+    """Dequantise back to float (inverse up to quantisation error)."""
+    return p.wq.astype(jnp.float32) * p.scale
+
+
+def _packable(v: Any) -> bool:
+    return (not isinstance(v, PackedLinear)
+            and hasattr(v, "ndim") and hasattr(v, "dtype")
+            and v.ndim >= 2 and jnp.issubdtype(v.dtype, jnp.floating))
+
+
+# linears that deliberately run outside the PUM path and must stay float:
+# the MoE router executes in fp32 regardless of mode (models/moe.py)
+_SKIP_LINEARS = ("router",)
+
+
+def prepack_params(params: Any, cfg: PUMConfig) -> Any:
+    """Walk a param tree, packing every linear weight (``{"w": ...}``).
+
+    The ``{"w": array}`` dict layout is how every PUM-routed linear stores
+    its weight (``layers.linear_init``); conv filters, expert stacks,
+    embeddings etc. use other key names and are left untouched, as are
+    linears that always execute in float (``_SKIP_LINEARS``).  A no-op
+    for ``mode="bf16"``.
+    """
+    if cfg.mode == "bf16":
+        return params
+
+    def walk(node, name=None):
+        if isinstance(node, dict):
+            skip = name in _SKIP_LINEARS
+            return {k: (pack_weight(v, cfg)
+                        if k == "w" and not skip and _packable(v)
+                        else walk(v, k))
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name) for v in node)
+        return node
+
+    return walk(params)
+
+
+def unpack_params(params: Any) -> Any:
+    """Inverse of :func:`prepack_params` (up to quantisation error)."""
+    def walk(node):
+        if isinstance(node, PackedLinear):
+            return unpack_weight(node)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)

@@ -17,17 +17,25 @@ which executes in one of three modes (``PUMConfig.mode``):
 Gradients: quantised modes use a straight-through estimator so QAT works
 out of the box (the forward sees quantised values, the backward sees
 identity) — training the model the ACE will eventually serve.
+
+Serving fast path: ``w`` may be a :class:`repro.core.prepack.PackedLinear`
+(weights quantised + bit-sliced once at load, the crossbar-programming
+phase).  The packed forward skips per-call quantisation/slicing *and* the
+dense bf16 shadow matmul, and is bit-exact to the QAT forward's value.
+``PUMConfig.inference=True`` drops the shadow matmul + STE for raw float
+weights too (quantise-per-call, but no dense FLOPs).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import PUMConfig
 from repro.core import analog, bitslice
+from repro.core.prepack import PackedLinear
 
 
 # ---------------------------------------------------------------------------
@@ -99,22 +107,73 @@ def _matmul_pum(x, w, cfg: PUMConfig, key: Optional[jax.Array]):
     return y.astype(x.dtype)
 
 
-def pum_linear(x: jax.Array, w: jax.Array, cfg: PUMConfig,
+# ---------------------------------------------------------------------------
+# Prepacked forward paths (serving): weights already quantised + sliced,
+# no shadow matmul, no per-call weight work.
+# ---------------------------------------------------------------------------
+
+def _matmul_int8_packed(x, w: PackedLinear):
+    xq, xs = bitslice.quantize_symmetric(x.astype(jnp.float32), 8)
+    acc = bitslice.int_matmul(xq, w.wq)
+    y = acc.astype(jnp.float32) * (xs * w.scale)
+    return y.astype(x.dtype)
+
+
+def _matmul_pum_packed(x, w: PackedLinear, cfg: PUMConfig,
+                       key: Optional[jax.Array]):
+    xq, xs = bitslice.quantize_symmetric(x.astype(jnp.float32),
+                                         cfg.input_bits)
+    x_bound = (1 << (cfg.input_bits - 1)) - 1
+    w_bound = (1 << (w.weight_bits - 1)) - 1
+    if cfg.noise.enable:
+        lead = xq.shape[:-1]
+        acc = analog.crossbar_mvm(
+            xq.reshape(-1, xq.shape[-1]), w.wq.astype(jnp.int32),
+            weight_bits=w.weight_bits, bits_per_slice=w.bits_per_slice,
+            input_bits=cfg.input_bits, adc=cfg.adc, noise=cfg.noise, key=key)
+        acc = acc.reshape(lead + (w.shape[-1],))
+    elif cfg.use_kernel:
+        from repro.kernels.bitslice_mvm import ops as bsops
+        acc = bsops.bitslice_mvm_planes(xq, w.planes,
+                                        bits_per_slice=w.bits_per_slice)
+    else:
+        # the decomposition is lossless, so the exact serving contraction
+        # runs against the recombined int8 weight in one MXU-friendly dot
+        acc = bitslice.int_matmul(xq, w.wq, x_bound=x_bound,
+                                  w_bound=w_bound)
+    y = acc.astype(jnp.float32) * (xs * w.scale)
+    return y.astype(x.dtype)
+
+
+def pum_linear(x: jax.Array, w: Union[jax.Array, PackedLinear],
+               cfg: PUMConfig,
                bias: Optional[jax.Array] = None,
                key: Optional[jax.Array] = None) -> jax.Array:
     """y = x @ w (+ bias) under the configured execution mode.
 
-    x: [..., K]; w: [K, N] float param. Differentiable in all modes (STE
-    for quantised forwards).
+    x: [..., K]; w: [K, N] float param, or a :class:`PackedLinear`
+    (prepacked serving weight).  Differentiable in all modes with a raw
+    float weight unless ``cfg.inference`` (STE for quantised forwards);
+    packed weights are inference-only and skip the shadow matmul.
     """
+    packed = isinstance(w, PackedLinear)
+    if packed:
+        assert w.ndim == 2, (
+            "pum_linear expects a per-layer PackedLinear [K, N]; stacked "
+            f"packs must be indexed/scanned first (got shape {w.shape})")
+        assert cfg.mode == w.mode, (cfg.mode, w.mode)
     if cfg.mode == "bf16":
+        assert not packed, "bf16 mode has no packed representation"
         y = _matmul_bf16(x, w)
     elif cfg.mode == "int8":
-        y_exact = _matmul_bf16(x, w)
-        y = _ste(y_exact, _matmul_int8(x, w))
+        yq = _matmul_int8_packed(x, w) if packed else _matmul_int8(x, w)
+        y = yq if (packed or cfg.inference) \
+            else _ste(_matmul_bf16(x, w), yq)
     elif cfg.mode == "pum":
-        y_exact = _matmul_bf16(x, w)
-        y = _ste(y_exact, _matmul_pum(x, w, cfg, key))
+        yq = _matmul_pum_packed(x, w, cfg, key) if packed \
+            else _matmul_pum(x, w, cfg, key)
+        y = yq if (packed or cfg.inference) \
+            else _ste(_matmul_bf16(x, w), yq)
     else:  # pragma: no cover
         raise ValueError(cfg.mode)
     if bias is not None:

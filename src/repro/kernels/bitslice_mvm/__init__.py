@@ -1,5 +1,6 @@
-from repro.kernels.bitslice_mvm.ops import bitslice_mvm
+from repro.kernels.bitslice_mvm.ops import bitslice_mvm, bitslice_mvm_planes
 from repro.kernels.bitslice_mvm.ref import (bitslice_mvm_from_weights_ref,
                                             bitslice_mvm_ref)
 
-__all__ = ["bitslice_mvm", "bitslice_mvm_ref", "bitslice_mvm_from_weights_ref"]
+__all__ = ["bitslice_mvm", "bitslice_mvm_planes", "bitslice_mvm_ref",
+           "bitslice_mvm_from_weights_ref"]

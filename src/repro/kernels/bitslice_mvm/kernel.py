@@ -77,6 +77,9 @@ def bitslice_mvm_pallas(x: jax.Array, w_planes: jax.Array, *,
     assert x.shape[1] == k
     assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0, (
         (m, k, n, block_m, block_k, block_n))
+    # adaptive M grid: ops.py shrinks block_m to the padded row count for
+    # small-M (decode) calls, so a [1, K] MVM runs a single 8/32-row tile
+    # instead of padding M to 128.
     k_steps = k // block_k
     grid = (m // block_m, n // block_n, k_steps)
 

@@ -1,8 +1,10 @@
-"""Jitted public wrapper for the bitslice_mvm Pallas kernel.
+"""Jitted public wrappers for the bitslice_mvm Pallas kernel.
 
 Handles: leading batch dims, padding to MXU-aligned tiles, plane
-decomposition from signed quantised weights, and the interpret-mode switch
-(CPU validation vs. TPU execution).
+decomposition from signed quantised weights (or pre-sliced planes via
+:func:`bitslice_mvm_planes` — the prepacked serving path), the adaptive M
+block for small-row decode MVMs, and the interpret-mode switch (CPU
+validation vs. TPU execution).
 """
 from __future__ import annotations
 
@@ -27,6 +29,34 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def _choose_block_m(m: int, block_m: int, interpret: bool) -> int:
+    """Adaptive M block: decode MVMs (M=1) must not pad rows to 128.
+
+    Returns the smallest power-of-two block covering ``m``, floored at the
+    hardware-minimum sublane tile (8 rows in interpret mode, 32 for int8
+    tiles on a real TPU), capped at ``block_m``.
+    """
+    if m >= block_m:
+        return block_m
+    floor = 8 if interpret else 32
+    return min(block_m, max(floor, 1 << (max(m, 1) - 1).bit_length()))
+
+
+def _run(x2: jax.Array, planes: jax.Array, *, bits_per_slice: int,
+         block_m: int, block_n: int, block_k: int,
+         interpret: bool) -> jax.Array:
+    """Shared padding + kernel dispatch. x2: [M, K] int8; planes: [S, K, N]."""
+    m = x2.shape[0]
+    n = planes.shape[2]
+    bm = _choose_block_m(m, block_m, interpret)
+    x2 = _pad_to(_pad_to(x2, 0, bm), 1, block_k)
+    planes = _pad_to(_pad_to(planes, 1, block_k), 2, block_n)
+    out = bitslice_mvm_pallas(x2, planes, bits_per_slice=bits_per_slice,
+                              block_m=bm, block_n=block_n,
+                              block_k=block_k, interpret=interpret)
+    return out[:m, :n]
+
+
 @functools.partial(jax.jit, static_argnames=("weight_bits", "bits_per_slice",
                                              "block_m", "block_n", "block_k",
                                              "interpret"))
@@ -34,7 +64,7 @@ def bitslice_mvm(x_q: jax.Array, w_q: jax.Array, *, weight_bits: int = 8,
                  bits_per_slice: int = 2, block_m: int = 128,
                  block_n: int = 128, block_k: int = 128,
                  interpret: bool | None = None) -> jax.Array:
-    """y = x_q @ w_q via the bit-sliced kernel.
+    """y = x_q @ w_q via the bit-sliced kernel (slices planes per call).
 
     x_q: [..., K] int (int8-range); w_q: [K, N] int signed (weight_bits).
     Returns [..., N] int32.
@@ -44,16 +74,33 @@ def bitslice_mvm(x_q: jax.Array, w_q: jax.Array, *, weight_bits: int = 8,
     lead = x_q.shape[:-1]
     k, n = w_q.shape
     x2 = x_q.reshape(-1, k).astype(jnp.int8)
-    m = x2.shape[0]
-
     planes = bitslice.slice_planes_signed(w_q, weight_bits,
                                           bits_per_slice).astype(jnp.int8)
+    out = _run(x2, planes, bits_per_slice=bits_per_slice, block_m=block_m,
+               block_n=block_n, block_k=block_k, interpret=interpret)
+    return out.reshape(lead + (n,))
 
-    bm = min(block_m, max(8, 1 << (m - 1).bit_length())) if m else block_m
-    x2 = _pad_to(_pad_to(x2, 0, block_m), 1, block_k)
-    planes = _pad_to(_pad_to(planes, 1, block_k), 2, block_n)
 
-    out = bitslice_mvm_pallas(x2, planes, bits_per_slice=bits_per_slice,
-                              block_m=block_m, block_n=block_n,
-                              block_k=block_k, interpret=interpret)
-    return out[:m, :n].reshape(lead + (n,))
+@functools.partial(jax.jit, static_argnames=("bits_per_slice", "block_m",
+                                             "block_n", "block_k",
+                                             "interpret"))
+def bitslice_mvm_planes(x_q: jax.Array, planes: jax.Array, *,
+                        bits_per_slice: int = 2, block_m: int = 128,
+                        block_n: int = 128, block_k: int = 128,
+                        interpret: bool | None = None) -> jax.Array:
+    """y over pre-sliced planes — the prepacked serving path.
+
+    x_q: [..., K] int (int8-range); planes: [S, K, N] int8 differential
+    planes (``PackedLinear.planes`` layout).  Skips the per-call
+    ``slice_planes_signed`` pass entirely.  Returns [..., N] int32.
+    """
+    if interpret is None:
+        interpret = _INTERPRET
+    lead = x_q.shape[:-1]
+    k = planes.shape[1]
+    n = planes.shape[2]
+    x2 = x_q.reshape(-1, k).astype(jnp.int8)
+    out = _run(x2, planes.astype(jnp.int8), bits_per_slice=bits_per_slice,
+               block_m=block_m, block_n=block_n, block_k=block_k,
+               interpret=interpret)
+    return out.reshape(lead + (n,))

@@ -26,6 +26,10 @@ def main():
     ap.add_argument("--pum-mode", default="bf16",
                     choices=["bf16", "int8", "pum"])
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--no-prepack", action="store_true",
+                    help="skip load-time weight packing (per-call quant)")
+    ap.add_argument("--loop", action="store_true",
+                    help="per-token Python loop instead of the fused scan")
     args = ap.parse_args()
 
     cfg = configs.get_reduced(args.arch)
@@ -33,7 +37,9 @@ def main():
         cfg = cfg.replace(pum=PUMConfig(mode=args.pum_mode))
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params,
-                      max_len=args.prompt_len + args.gen + 1)
+                      max_len=args.prompt_len + args.gen + 1,
+                      prepack=not args.no_prepack,
+                      use_scan=not args.loop)
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
@@ -41,7 +47,10 @@ def main():
     out = eng.generate(prompt, args.gen, temperature=args.temperature)
     dt = time.perf_counter() - t0
     toks = args.batch * args.gen
+    prepacked = (not args.no_prepack) and args.pum_mode != "bf16"
     print(f"arch={args.arch} mode={args.pum_mode} "
+          f"decode={'loop' if args.loop else 'scan'} "
+          f"prepack={'on' if prepacked else 'off'} "
           f"generated {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s incl. compile)")
     print("sample:", out[0, :32].tolist())

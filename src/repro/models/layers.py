@@ -24,6 +24,9 @@ def linear_init(key, d_in: int, d_out: int, bias: bool = False,
 
 
 def linear(p: Params, x: jax.Array, pum: PUMConfig) -> jax.Array:
+    """``p["w"]`` is a float weight (training/QAT) or a prepacked
+    ``repro.core.prepack.PackedLinear`` (serving); ``pum_linear`` routes
+    both."""
     return pum_linear(x, p["w"], pum, bias=p.get("b"))
 
 

@@ -80,6 +80,18 @@ def params_shape(cfg: ModelConfig) -> Params:
                           jax.random.PRNGKey(0))
 
 
+def prepack_for_serving(params: Params, cfg: ModelConfig) -> Params:
+    """Pack every linear weight once for inference (crossbar programming).
+
+    No-op for bf16.  The embedding table and lm_head stay float (they are
+    not PUM-routed); every ``{"w": ...}`` linear — block projections,
+    encoder blocks, vision_proj — becomes a ``PackedLinear`` whose forward
+    skips per-call quantisation/slicing and the QAT shadow matmul.
+    """
+    from repro.core import prepack
+    return prepack.prepack_params(params, cfg.pum)
+
+
 # ---------------------------------------------------------------------------
 # Decode-state trees
 # ---------------------------------------------------------------------------

@@ -1,17 +1,24 @@
-"""Batched serving engine: prefill + decode with per-family state.
+"""Batched serving engine: prefill + fused-scan decode with per-family state.
 
 ``make_decode_step`` builds the jittable one-token step that the dry-run
 lowers for the ``decode_*`` shapes (one new token against a seq_len-deep
-cache), and that ``generate`` loops on CPU for the runnable examples.
+cache).  ``ServeEngine.generate`` runs the whole decode as a single jitted
+``jax.lax.scan`` (one dispatch for N tokens, donated carry); the original
+per-token Python loop is retained as ``generate_loop``, the correctness
+oracle.
+
+At construction the engine prepacks quantised weights
+(``repro.core.prepack``) so int8/pum serving pays quantisation + slicing
+once, at load — the crossbar-programming phase — instead of per MVM.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import lm
@@ -43,34 +50,108 @@ def sample_token(logits: jax.Array, key, temperature: float = 0.0,
 
 class ServeEngine:
     """Small-scale engine for the examples/tests (full batched semantics;
-    on TPU the same steps run under pjit via launch/serve.py)."""
+    on TPU the same steps run under pjit via launch/serve.py).
 
-    def __init__(self, cfg: ModelConfig, params, max_len: int = 128):
+    prepack — pack linear weights at load (int8/pum modes; default on).
+    use_scan — decode via the fused ``lax.scan`` (default) or the Python
+    token loop (the oracle, also reachable via ``generate_loop``).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 128,
+                 prepack: Optional[bool] = None, use_scan: bool = True):
+        if prepack is None:
+            prepack = cfg.pum.mode in ("int8", "pum")
+        if prepack and cfg.pum.mode in ("int8", "pum"):
+            params = lm.prepack_for_serving(params, cfg)
+            cfg = cfg.replace(
+                pum=dataclasses.replace(cfg.pum, inference=True))
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self.use_scan = use_scan
         self._decode = jax.jit(make_decode_step(cfg))
+        self._prefill = jax.jit(self._prefill_impl)
+        self._scan_gen = self._build_scan_generate()
 
-    def prefill(self, tokens: jax.Array,
-                encoder_frames: Optional[jax.Array] = None,
-                ) -> Tuple[Any, jax.Array, Optional[jax.Array]]:
+    def _prefill_impl(self, params, tokens: jax.Array,
+                      encoder_frames: Optional[jax.Array],
+                      ) -> Tuple[Any, jax.Array, Optional[jax.Array]]:
         b, s = tokens.shape
         states = lm.init_state(self.cfg, b, self.max_len)
         encoder_out = None
         if self.cfg.is_encoder_decoder and encoder_frames is not None:
-            encoder_out = lm._run_encoder(self.params, self.cfg,
-                                          encoder_frames)
+            encoder_out = lm._run_encoder(params, self.cfg, encoder_frames)
         logits, states, _ = lm.forward(
-            self.params, tokens, self.cfg, states=states,
+            params, tokens, self.cfg, states=states,
             cache_index=jnp.int32(0), encoder_out=encoder_out,
             last_only=True)
         return states, logits, encoder_out
 
+    def prefill(self, tokens: jax.Array,
+                encoder_frames: Optional[jax.Array] = None,
+                ) -> Tuple[Any, jax.Array, Optional[jax.Array]]:
+        return self._prefill(self.params, tokens, encoder_frames)
+
+    # -- fused decode: the whole token loop is one jitted scan ------------
+
+    def _build_scan_generate(self):
+        decode = make_decode_step(self.cfg)
+
+        @functools.partial(jax.jit,
+                           static_argnames=("steps", "temperature"),
+                           donate_argnums=(1,))
+        def scan_generate(params, states, tok0, key, index, encoder_out, *,
+                          steps: int, temperature: float):
+            """Carry = (states, token, key, index); emits steps-1 tokens
+            after ``tok0`` (mirrors generate_loop's schedule exactly)."""
+            def body(carry, i):
+                states, tok, key, index = carry
+                key = jax.random.fold_in(key, i)
+                logits, states = decode(params, states, tok, index,
+                                        encoder_out=encoder_out)
+                nxt = sample_token(logits, key, temperature)
+                return (states, nxt, key, index + 1), nxt
+
+            carry = (states, tok0, key, index)
+            carry, toks = jax.lax.scan(body, carry, jnp.arange(steps - 1))
+            # returning the final states makes the donated input buffers
+            # reusable (and lets callers continue the decode later)
+            return toks, carry[0]                      # [steps-1, B, 1]
+
+        return scan_generate
+
     def generate(self, prompt: jax.Array, steps: int,
                  temperature: float = 0.0,
                  encoder_frames: Optional[jax.Array] = None,
-                 seed: int = 0) -> jax.Array:
+                 seed: int = 0,
+                 use_scan: Optional[bool] = None) -> jax.Array:
         """prompt: [B, S] -> [B, S + steps] greedy/sampled continuation."""
+        if use_scan is None:
+            use_scan = self.use_scan
+        if not use_scan:
+            return self.generate_loop(prompt, steps, temperature,
+                                      encoder_frames, seed)
+        if steps <= 0:
+            return prompt
+        b, s = prompt.shape
+        assert s + steps <= self.max_len
+        states, logits, encoder_out = self.prefill(prompt, encoder_frames)
+        key = jax.random.PRNGKey(seed)
+        index = jnp.int32(s)
+        tok0 = sample_token(logits, key, temperature)
+        toks, _ = self._scan_gen(self.params, states, tok0, key, index,
+                                 encoder_out, steps=steps,
+                                 temperature=temperature)
+        rest = jnp.moveaxis(toks[..., 0], 0, 1)        # [B, steps-1]
+        return jnp.concatenate([prompt, tok0, rest], axis=1)
+
+    # -- per-token Python loop: the scan path's oracle --------------------
+
+    def generate_loop(self, prompt: jax.Array, steps: int,
+                      temperature: float = 0.0,
+                      encoder_frames: Optional[jax.Array] = None,
+                      seed: int = 0) -> jax.Array:
+        """One jitted dispatch per token (the pre-scan implementation)."""
         b, s = prompt.shape
         assert s + steps <= self.max_len
         states, logits, encoder_out = self.prefill(prompt, encoder_frames)

@@ -71,6 +71,67 @@ def test_bitslice_int32_accumulation_no_overflow_at_bounds():
     assert int(got[0, 0]) == 127 * 127 * k
 
 
+def test_bitslice_adaptive_block_m_no_128_padding():
+    """Regression: `bm` used to be computed but never passed to the
+    kernel, so an M=1 decode MVM padded its row axis to 128.  The adaptive
+    block must cover small M with the minimal hardware tile instead."""
+    from repro.kernels.bitslice_mvm.ops import _choose_block_m
+    assert _choose_block_m(1, 128, interpret=True) == 8
+    assert _choose_block_m(5, 128, interpret=True) == 8
+    assert _choose_block_m(20, 128, interpret=True) == 32
+    assert _choose_block_m(128, 128, interpret=True) == 128
+    assert _choose_block_m(300, 128, interpret=True) == 128
+    # real-TPU int8 tiles need >= 32 sublanes
+    assert _choose_block_m(1, 128, interpret=False) == 32
+    # adaptive block never exceeds the requested block_m
+    assert _choose_block_m(1, 8, interpret=True) == 8
+
+    # a [1, K] decode MVM runs (with an 8-row tile, not 128) and is exact
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.integers(-127, 128, size=(1, 256)), jnp.int32)
+    w = jnp.asarray(rng.integers(-127, 128, size=(256, 128)), jnp.int32)
+    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, interpret=True)
+    want = np.asarray(x, np.int64) @ np.asarray(w, np.int64)
+    assert got.shape == (1, 128)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+    # the lowered computation must not materialise a 128-row activation
+    def all_eqns(jaxpr):
+        for eqn in jaxpr.eqns:
+            yield eqn
+            for p in eqn.params.values():
+                if type(p).__name__ == "ClosedJaxpr":
+                    yield from all_eqns(p.jaxpr)
+                elif type(p).__name__ == "Jaxpr":
+                    yield from all_eqns(p)
+
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: bitslice_mvm(a, b, weight_bits=8, bits_per_slice=2,
+                                  interpret=True))(x, w)
+    # activation intermediates are [M_padded, K=256]; the kernel's weight
+    # tiles are [bk, bn] and never have K columns
+    act_rows = {v.aval.shape[0] for eqn in all_eqns(jaxpr.jaxpr)
+                for v in eqn.outvars
+                if len(getattr(v.aval, "shape", ())) == 2
+                and v.aval.shape[1] == 256}
+    assert act_rows and 128 not in act_rows, act_rows
+    assert 8 in act_rows, act_rows          # padded to the 8-row tile only
+
+
+def test_bitslice_mvm_planes_matches_per_call_slicing():
+    """The prepacked entry (pre-sliced planes) equals the slicing entry."""
+    from repro.kernels.bitslice_mvm import bitslice_mvm_planes
+    rng = np.random.default_rng(12)
+    for m in (1, 8, 130):
+        x = jnp.asarray(rng.integers(-100, 101, size=(m, 96)), jnp.int32)
+        w = jnp.asarray(rng.integers(-127, 128, size=(96, 72)), jnp.int32)
+        planes = bitslice.slice_planes_signed(w, 8, 2).astype(jnp.int8)
+        got = bitslice_mvm_planes(x, planes, bits_per_slice=2,
+                                  interpret=True)
+        want = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2,
+                            interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 # ---------------------------------------------------------------------------
 # gf2_mvm
 # ---------------------------------------------------------------------------
