@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist quickstart bench bench-smoke
+.PHONY: test test-dist test-serve quickstart bench bench-smoke
 
 # tier-1 verify; test_distributed.py spawns its own subprocesses with
 # XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -10,6 +10,12 @@ test:
 
 test-dist:
 	$(PY) -m pytest -q tests/test_distributed.py tests/test_dist_unit.py
+
+# scheduler + serving path standalone: continuous-batching oracle
+# equivalence, fused-scan decode, sampling, prepack/bitslice properties
+test-serve:
+	$(PY) -m pytest -q tests/test_scheduler.py tests/test_serve_scan.py \
+		tests/test_sampling.py tests/test_prepack.py tests/test_bitslice.py
 
 quickstart:
 	$(PY) examples/quickstart.py

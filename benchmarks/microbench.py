@@ -136,6 +136,44 @@ def bench_serve_decode(small: bool = False) -> List[Row]:
              "x")]
 
 
+def bench_serve_batch(small: bool = False) -> List[Row]:
+    """Continuous-batching throughput vs slot count.
+
+    A saturating burst (2x slots requests, identical shapes) decoded by
+    the slot-wise scheduler: the per-step dispatch is amortised over all
+    live slots, so tokens/s should grow with the slot count — the
+    scheduler's whole reason to exist."""
+    from repro.config import small_test_config
+    from repro.models import lm
+    from repro.serve import ContinuousBatchingScheduler, Request
+
+    gen = 8 if small else 32
+    plen = 8
+    cfg = small_test_config()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+
+    def trace(n):
+        return [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                            size=plen).tolist(),
+                        max_tokens=gen, seed=int(rng.integers(2**31)),
+                        rid=i) for i in range(n)]
+
+    rows: List[Row] = []
+    for slots in (1, 2) if small else (1, 2, 4, 8):
+        sched = ContinuousBatchingScheduler(cfg, params, num_slots=slots,
+                                            max_len=plen + gen + 1)
+        sched.run(trace(2 * slots))              # warm: compiles step+prefill
+        reqs = trace(2 * slots)
+        t0 = time.perf_counter()
+        out = sched.run(reqs)
+        dt = time.perf_counter() - t0
+        toks = sum(len(c.tokens) for c in out.values())
+        rows.append((f"serve_batch/slots{slots}_toks_per_s", toks / dt,
+                     "tok/s"))
+    return rows
+
+
 ALL_MICRO = {
     "aes_bulk": bench_aes_bulk,
     "bitslice_mvm": bench_bitslice_mvm,
@@ -143,4 +181,5 @@ ALL_MICRO = {
     "ibert": bench_ibert,
     "pum_linear": bench_pum_linear,
     "serve_decode": bench_serve_decode,
+    "serve_batch": bench_serve_batch,
 }

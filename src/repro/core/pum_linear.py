@@ -67,13 +67,28 @@ def fake_quant(x: jax.Array, bits: int, axis=None) -> jax.Array:
 # Forward paths
 # ---------------------------------------------------------------------------
 
+def _quantize_act(x, bits: int):
+    """Activation quantisation with a *per-input-row* scale.
+
+    Each input vector of an MVM is applied through the DACs with its own
+    full-scale range, so the scale reduces over the contraction axis only
+    (one scale per token position), never across the batch.  This keeps
+    every batch row's numerics independent of what it is co-batched with —
+    the invariant the continuous-batching scheduler's oracle-equivalence
+    suite pins (a request decodes bit-identically alone or in a full
+    slot pool).
+    """
+    return bitslice.quantize_symmetric(x.astype(jnp.float32), bits,
+                                       axis=x.ndim - 1)
+
+
 def _matmul_bf16(x, w):
     return jnp.matmul(x, w.astype(x.dtype))
 
 
 def _matmul_int8(x, w):
     """Dynamic activation quant + weight quant, int32 accumulation."""
-    xq, xs = bitslice.quantize_symmetric(x.astype(jnp.float32), 8)
+    xq, xs = _quantize_act(x, 8)
     wq, ws = bitslice.quantize_symmetric(w.astype(jnp.float32), 8, axis=0)
     acc = jax.lax.dot_general(
         xq.astype(jnp.int8), wq.astype(jnp.int8),
@@ -86,7 +101,7 @@ def _matmul_int8(x, w):
 def _matmul_pum(x, w, cfg: PUMConfig, key: Optional[jax.Array]):
     """Bit-sliced path. Exact (kernel/oracle) unless noise is enabled, in
     which case the ACE fidelity sim (ADC + parasitics) runs."""
-    xq, xs = bitslice.quantize_symmetric(x.astype(jnp.float32), cfg.input_bits)
+    xq, xs = _quantize_act(x, cfg.input_bits)
     wq, ws = bitslice.quantize_symmetric(w.astype(jnp.float32),
                                          cfg.weight_bits)
     if cfg.noise.enable:
@@ -113,7 +128,7 @@ def _matmul_pum(x, w, cfg: PUMConfig, key: Optional[jax.Array]):
 # ---------------------------------------------------------------------------
 
 def _matmul_int8_packed(x, w: PackedLinear):
-    xq, xs = bitslice.quantize_symmetric(x.astype(jnp.float32), 8)
+    xq, xs = _quantize_act(x, 8)
     acc = bitslice.int_matmul(xq, w.wq)
     y = acc.astype(jnp.float32) * (xs * w.scale)
     return y.astype(x.dtype)
@@ -121,8 +136,7 @@ def _matmul_int8_packed(x, w: PackedLinear):
 
 def _matmul_pum_packed(x, w: PackedLinear, cfg: PUMConfig,
                        key: Optional[jax.Array]):
-    xq, xs = bitslice.quantize_symmetric(x.astype(jnp.float32),
-                                         cfg.input_bits)
+    xq, xs = _quantize_act(x, cfg.input_bits)
     x_bound = (1 << (cfg.input_bits - 1)) - 1
     w_bound = (1 << (w.weight_bits - 1)) - 1
     if cfg.noise.enable:

@@ -1,7 +1,13 @@
 """Serving launcher: batched generation with the PUM execution modes.
 
+Static batch (PR 2 fused scan):
 ``python -m repro.launch.serve --arch glm4-9b --batch 4 --prompt-len 16
 --gen 16 --pum-mode int8``
+
+Continuous batching (slot-based scheduler over a synthetic arrival
+trace):
+``python -m repro.launch.serve --arch glm4-9b --batch-slots 4
+--workload poisson --requests 16 --gen 16``
 """
 from __future__ import annotations
 
@@ -14,7 +20,8 @@ import jax.numpy as jnp
 from repro import configs
 from repro.config import PUMConfig
 from repro.models import lm
-from repro.serve import ServeEngine
+from repro.serve import (ContinuousBatchingScheduler, ServeEngine,
+                         synthetic_workload)
 
 
 def main():
@@ -30,12 +37,29 @@ def main():
                     help="skip load-time weight packing (per-call quant)")
     ap.add_argument("--loop", action="store_true",
                     help="per-token Python loop instead of the fused scan")
+    ap.add_argument("--batch-slots", type=int, default=0,
+                    help="continuous batching: run the slot-based "
+                         "scheduler with this many decode slots over a "
+                         "synthetic arrival trace (0 = static batch)")
+    ap.add_argument("--workload", default="burst",
+                    choices=["burst", "poisson"],
+                    help="arrival trace shape for --batch-slots: every "
+                         "request at t=0, or exponential inter-arrivals")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="trace length for --batch-slots "
+                         "(default: 4x slots)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload trace seed for --batch-slots")
     args = ap.parse_args()
 
     cfg = configs.get_reduced(args.arch)
     if args.pum_mode != "bf16":
         cfg = cfg.replace(pum=PUMConfig(mode=args.pum_mode))
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    if args.batch_slots > 0:
+        serve_continuous(cfg, params, args)
+        return
     eng = ServeEngine(cfg, params,
                       max_len=args.prompt_len + args.gen + 1,
                       prepack=not args.no_prepack,
@@ -54,6 +78,34 @@ def main():
           f"generated {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s incl. compile)")
     print("sample:", out[0, :32].tolist())
+
+
+def serve_continuous(cfg, params, args) -> None:
+    """Drive the slot-based scheduler over a synthetic arrival trace."""
+    n = args.requests or 4 * args.batch_slots
+    max_len = args.prompt_len + args.gen + 1
+    sched = ContinuousBatchingScheduler(
+        cfg, params, num_slots=args.batch_slots, max_len=max_len,
+        prepack=not args.no_prepack)
+    reqs = synthetic_workload(
+        n, cfg.vocab_size, max_prompt=args.prompt_len, max_new=args.gen,
+        mean_interarrival=0.0 if args.workload == "burst" else 2.0,
+        temperature_choices=(args.temperature,), seed=args.seed)
+    t0 = time.perf_counter()
+    out = sched.run(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(len(c.tokens) for c in out.values())
+    eos_n = sum(c.finish_reason == "eos" for c in out.values())
+    lat = [c.finished_step - r.arrival for r, c in
+           ((r, out[r.rid]) for r in reqs)]
+    print(f"arch={args.arch} mode={args.pum_mode} slots={args.batch_slots} "
+          f"workload={args.workload} served {len(out)} requests "
+          f"({toks} tokens) in {dt:.2f}s ({toks / dt:.1f} tok/s incl. "
+          f"compile)")
+    print(f"finish: {eos_n} eos / {len(out) - eos_n} length; latency "
+          f"steps p50={sorted(lat)[len(lat) // 2]} max={max(lat)}")
+    first = out[reqs[0].rid]
+    print("sample:", (first.prompt + first.tokens)[:32])
 
 
 if __name__ == "__main__":

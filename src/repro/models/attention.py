@@ -64,11 +64,14 @@ def _softmax(scores: jax.Array, softcap: float) -> jax.Array:
 
 
 def _plain_attention(q, k, v, mask, softcap, ibert_mode=False):
-    """q: [B,S,KV,G,hd]; k/v: [B,T,KV,hd]; mask: [S,T]."""
+    """q: [B,S,KV,G,hd]; k/v: [B,T,KV,hd]; mask: [S,T] shared across the
+    batch, or [B,S,T] per-row (slot-wise decode at per-slot depths)."""
     scale = 1.0 / np.sqrt(q.shape[-1])
     scores = jnp.einsum("bskgd,btkd->bksgt", q, k,
                         preferred_element_type=jnp.float32) * scale
-    scores = jnp.where(mask[None, None, :, None, :], scores, NEG_INF)
+    m = mask[None, None, :, None, :] if mask.ndim == 2 \
+        else mask[:, None, :, None, :]
+    scores = jnp.where(m, scores, NEG_INF)
     if ibert_mode:
         probs = ibert.softmax_quantized(scores.astype(jnp.float32), bits=8,
                                         axis=-1)
@@ -153,6 +156,9 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
       * train/prefill (cache None, cross_kv None): causal self-attention;
         chunked online-softmax when S > 2*CHUNK_Q.
       * decode (cache set): writes K/V at cache_index, attends over cache.
+        ``cache_index`` may be a [B] vector — continuous batching, where
+        every slot sits at a different cache depth (write, RoPE position
+        and causal mask are then all per-row).
       * cross attention (cross_kv set): encoder-decoder attention.
     """
     b, s, d = x.shape
@@ -173,20 +179,40 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         k, v = cross_kv
 
     if cache is not None and cross_kv is None:
-        # decode/prefill-into-cache: write the new K/V at cache_index
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        # decode/prefill-into-cache: write the new K/V at cache_index —
+        # a scalar (whole batch at one depth) or a [B] vector (slot-wise
+        # decode: each row writes/attends at its own depth)
+        cache_index = jnp.asarray(cache_index)
+        per_slot = cache_index.ndim == 1
+        if per_slot:
+            def upd(c, new):
+                return jax.vmap(
+                    lambda row, n, i: jax.lax.dynamic_update_slice_in_dim(
+                        row, n, i, axis=0)
+                )(c, new.astype(c.dtype), cache_index)
+        else:
+            def upd(c, new):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, new.astype(c.dtype), cache_index, axis=1)
+        k_cache = upd(cache["k"], k)
+        v_cache = upd(cache["v"], v)
         cache = {"k": k_cache, "v": v_cache}
         t = k_cache.shape[1]
         if s > 2 * CHUNK_Q:
-            # long prefill into a cache: chunked online softmax
+            # long prefill into a cache: chunked online softmax (prefill
+            # is always per-request here, so the offset is a scalar)
+            assert not per_slot, \
+                "chunked prefill expects a scalar cache_index"
             out = _chunked_attention(q, k_cache, v_cache, cache_index,
                                      cfg.attn_logit_softcap)
         else:
             kpos = jnp.arange(t)
-            mask = (kpos[None, :] <= cache_index + jnp.arange(s)[:, None])
+            if per_slot:
+                qpos = cache_index[:, None] + jnp.arange(s)[None, :]
+                mask = kpos[None, None, :] <= qpos[..., None]   # [B,S,T]
+            else:
+                mask = (kpos[None, :]
+                        <= cache_index + jnp.arange(s)[:, None])
             out = _plain_attention(q, k_cache, v_cache, mask,
                                    cfg.attn_logit_softcap,
                                    ibert_mode=pum.ibert)

@@ -168,6 +168,11 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
 
     Modes: train (states None); prefill (states = fresh init_state,
     cache_index=0); decode (states given, cache_index = position).
+    ``cache_index`` may be a scalar (whole batch at one position) or a
+    vector ``[B]`` (continuous batching: every slot at its own depth).
+    The vector form threads through all state families — dense KV caches
+    write/mask per row; xlstm and ssm states are per-row recurrences that
+    never index the cache, so the position only shapes RoPE.
     VLM: image_embeds [B, N, D] prepended.  Enc-dec: encoder_frames
     [B, T, D] runs the encoder (or pass precomputed ``encoder_out``).
     """
@@ -182,7 +187,11 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     h = shard_act(h, "data", None, None)
 
     if cache_index is not None:
-        positions = cache_index + jnp.arange(s)
+        cache_index = jnp.asarray(cache_index)
+        if cache_index.ndim == 1:          # per-slot depths -> [B, S]
+            positions = cache_index[:, None] + jnp.arange(s)[None, :]
+        else:
+            positions = cache_index + jnp.arange(s)
     else:
         positions = jnp.arange(s)
 

@@ -1,1 +1,4 @@
-from repro.serve.engine import ServeEngine, make_decode_step
+from repro.serve.engine import ServeEngine, make_decode_step, sample_token
+from repro.serve.scheduler import (Completion, ContinuousBatchingScheduler,
+                                   Request, make_slot_step,
+                                   oracle_completion, synthetic_workload)

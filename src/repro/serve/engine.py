@@ -26,7 +26,12 @@ from repro.models import lm
 
 def make_decode_step(cfg: ModelConfig, scan_layers: bool = True):
     """(params, states, token [B,1], cache_index, extras) ->
-    (logits [B,1,V], states')."""
+    (logits [B,1,V], states').
+
+    ``cache_index`` is a scalar for lockstep batched decode, or an int32
+    ``[B]`` vector for slot-wise decode (continuous batching): each batch
+    row advances at its own cache depth, with per-row KV writes, RoPE
+    positions, and causal masks (``models.lm.forward`` handles both)."""
 
     def decode_step(params, states, token, cache_index, *,
                     encoder_out: Optional[jax.Array] = None):
@@ -39,13 +44,30 @@ def make_decode_step(cfg: ModelConfig, scan_layers: bool = True):
     return decode_step
 
 
-def sample_token(logits: jax.Array, key, temperature: float = 0.0,
-                 ) -> jax.Array:
-    """logits: [B, 1, V] -> [B, 1] int32 (greedy at temperature 0)."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    return jax.random.categorical(
-        key, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
+def sample_token(logits: jax.Array, key, temperature=0.0) -> jax.Array:
+    """logits: [B, 1, V] -> [B, 1] int32 (greedy at temperature 0).
+
+    Two forms:
+      * scalar ``temperature`` + a single PRNG key — the whole batch
+        shares one sampling mode/key (lockstep decode).
+      * vector ``temperature`` [B] + stacked keys [B, 2] — per-slot
+        sampling (continuous batching): each row draws from its own key
+        at its own temperature, rows with temperature <= 0 are greedy.
+        Row ``i`` produces the *same* token a solo batch-1 call with
+        ``(key[i], temperature[i])`` would — the oracle-equivalence
+        invariant the scheduler tests pin.
+    """
+    last = logits[:, -1]
+    if not (hasattr(temperature, "ndim") and temperature.ndim):
+        if float(temperature) <= 0.0:
+            return jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(
+            key, last / temperature)[:, None].astype(jnp.int32)
+    greedy = jnp.argmax(last, axis=-1)
+    safe_t = jnp.where(temperature > 0, temperature, 1.0)
+    sampled = jax.vmap(jax.random.categorical)(key, last / safe_t[:, None])
+    tok = jnp.where(temperature > 0, sampled, greedy)
+    return tok[:, None].astype(jnp.int32)
 
 
 class ServeEngine:
@@ -86,6 +108,17 @@ class ServeEngine:
             cache_index=jnp.int32(0), encoder_out=encoder_out,
             last_only=True)
         return states, logits, encoder_out
+
+    def _check_window(self, prompt_len: int, steps: int) -> None:
+        """The KV/cache window is allocated once at ``max_len``; a decode
+        that would write past it corrupts nothing but silently truncates
+        (dynamic_update_slice clamps), so reject it loudly instead."""
+        if prompt_len + steps > self.max_len:
+            raise ValueError(
+                f"decode window overflow: prompt_len={prompt_len} + "
+                f"steps={steps} = {prompt_len + steps} exceeds the "
+                f"engine's max_len={self.max_len}; re-create the engine "
+                f"with max_len >= {prompt_len + steps}")
 
     def prefill(self, tokens: jax.Array,
                 encoder_frames: Optional[jax.Array] = None,
@@ -134,7 +167,7 @@ class ServeEngine:
         if steps <= 0:
             return prompt
         b, s = prompt.shape
-        assert s + steps <= self.max_len
+        self._check_window(s, steps)
         states, logits, encoder_out = self.prefill(prompt, encoder_frames)
         key = jax.random.PRNGKey(seed)
         index = jnp.int32(s)
@@ -153,7 +186,7 @@ class ServeEngine:
                       seed: int = 0) -> jax.Array:
         """One jitted dispatch per token (the pre-scan implementation)."""
         b, s = prompt.shape
-        assert s + steps <= self.max_len
+        self._check_window(s, steps)
         states, logits, encoder_out = self.prefill(prompt, encoder_frames)
         key = jax.random.PRNGKey(seed)
         out = [prompt]

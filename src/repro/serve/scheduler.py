@@ -1,0 +1,360 @@
+"""Continuous-batching serve scheduler: slot-based decode over one
+shared prepacked parameter set.
+
+PR 2 made a *static* batch decode fast; real serving traffic (the
+ROADMAP's north star) is a stream of requests that arrive at different
+times, with different prompt lengths, temperatures and stop conditions,
+and finish at different times.  PUMA-style PUM accelerators live or die
+by the runtime that keeps the (expensively programmed) crossbars busy
+across concurrent workloads — weights are packed once at load and every
+request decodes against the same programmed arrays.
+
+Design
+------
+A fixed pool of ``num_slots`` decode slots backs one shared, group-
+stacked decode-state tree (batch axis = slots).  The engine runs three
+kinds of work:
+
+  * **admit** — a queued request claims a free slot: its prompt is
+    prefilled alone (batch 1, exact length — the same jitted prefill the
+    oracle uses) and the resulting state is spliced into the shared tree
+    at the slot's batch row.  The first token is sampled from the
+    prefill logits with the request's own PRNG key.
+  * **step** — ONE jitted slot-wise decode advances *all* slots: per-
+    slot ``cache_index`` vector (every row writes/attends at its own
+    depth), per-slot RNG keys folded by each request's local step count,
+    per-slot temperatures, and an active mask.  Finished/empty slots run
+    through the same computation (shapes never change, so the step
+    compiles exactly once) but their lanes are masked out of bookkeeping.
+  * **retire** — a slot whose row sampled its EOS id, or hit its
+    ``max_tokens`` budget, frees the slot for the next queued request.
+
+The host loop is plain Python (admission order, arrival times, harvest);
+everything per-token is inside the one jitted step.
+
+Oracle equivalence
+------------------
+For *any* interleaved arrival trace, every request's tokens are
+bit-identical to running that request alone through
+``ServeEngine.generate_loop`` — greedy and sampled, across state
+families (dense KV / xlstm / ssm) and execution modes (bf16/int8/pum).
+``tests/test_scheduler.py`` property-tests this invariant.  Two pieces
+of the stack make it hold:
+
+  * activation quantisation uses per-input-row scales
+    (``core.pum_linear._quantize_act``), so a row's numerics never
+    depend on what it is co-batched with;
+  * per-slot sampling draws each row from its own key
+    (``engine.sample_token``'s vector form), reproducing the solo call's
+    key schedule exactly.
+
+MoE configs schedule fine but are excluded from the guarantee: expert
+capacity is shared across the batch, so dropping is inherently coupled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import lm
+from repro.serve.engine import ServeEngine, make_decode_step, sample_token
+
+
+# ---------------------------------------------------------------------------
+# Request / completion records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One generation request entering the scheduler's queue.
+
+    ``arrival`` is measured in scheduler decode steps: the request is
+    invisible to admission before that step (synthetic arrival traces).
+    ``eos_id < 0`` disables EOS termination; ``max_tokens`` counts every
+    generated token, including the EOS itself.
+    """
+    prompt: Sequence[int]
+    max_tokens: int
+    temperature: float = 0.0
+    eos_id: int = -1
+    seed: int = 0
+    arrival: int = 0
+    rid: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt: List[int]
+    tokens: List[int]                  # generated tokens, EOS included
+    finish_reason: str                 # "eos" | "length"
+    admitted_step: int                 # scheduler step of admission
+    finished_step: int                 # scheduler step of the last token
+
+
+# ---------------------------------------------------------------------------
+# The jitted slot-wise decode step
+# ---------------------------------------------------------------------------
+
+def make_slot_step(cfg: ModelConfig):
+    """Build the one-dispatch-per-token engine core.
+
+    (params, states, cur_tok [B,1], cache_index [B], keys [B,2],
+     active [B] bool, temp [B], eos [B], gen [B], max_toks [B])
+      -> (states', tok [B], cache_index', keys', active', gen', done [B])
+
+    Every slot — live, finished, or never filled — flows through the
+    same decode so the step compiles once; ``active`` masks slots out of
+    the counters and termination logic.  Key schedule per slot: the
+    request's chain key is folded with its local step number
+    (``gen - 1``), mirroring ``generate_loop``'s ``fold_in(key, i)``.
+    """
+    decode = make_decode_step(cfg)
+
+    def slot_step(params, states, cur_tok, cache_index, keys, active,
+                  temp, eos, gen, max_toks):
+        step_keys = jax.vmap(jax.random.fold_in)(keys, gen - 1)
+        logits, states = decode(params, states, cur_tok, cache_index)
+        tok = sample_token(logits, step_keys, temp)            # [B, 1]
+        gen = gen + active.astype(gen.dtype)
+        done = active & ((tok[:, 0] == eos) | (gen >= max_toks))
+        cache_index = cache_index + active.astype(cache_index.dtype)
+        active = active & ~done
+        return states, tok[:, 0], cache_index, step_keys, active, gen, done
+
+    return slot_step
+
+
+# ---------------------------------------------------------------------------
+# The scheduler
+# ---------------------------------------------------------------------------
+
+class ContinuousBatchingScheduler:
+    """Continuous-batching engine over a fixed pool of decode slots.
+
+    Wraps a :class:`ServeEngine` (shared prepacked params, jitted
+    prefill) and adds the slot pool + host admission loop.  ``run`` is
+    re-entrant: all slots drain before it returns, so one scheduler
+    serves many traces (and the jitted step/prefill stay warm).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, num_slots: int = 4,
+                 max_len: int = 128, prepack: Optional[bool] = None):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.engine = ServeEngine(cfg, params, max_len=max_len,
+                                  prepack=prepack)
+        self.cfg = self.engine.cfg
+        self.params = self.engine.params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        # donate the state tree: the per-row KV-cache updates then happen
+        # in place instead of copying the whole cache every token (the
+        # host rebinds self.states to the step's return unconditionally)
+        self._step = jax.jit(make_slot_step(self.cfg),
+                             donate_argnums=(1,))
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._reset()
+
+    def _reset(self) -> None:
+        b = self.num_slots
+        self.states = lm.init_state(self.cfg, b, self.max_len)
+        # host mirrors of the per-slot lanes (tiny; re-shipped per step)
+        self._cur_tok = np.zeros((b, 1), np.int32)
+        self._cache_index = np.zeros((b,), np.int32)
+        self._keys = np.zeros((b, 2), np.uint32)
+        self._active = np.zeros((b,), bool)
+        self._temp = np.zeros((b,), np.float32)
+        self._eos = np.full((b,), -1, np.int32)
+        self._gen = np.zeros((b,), np.int32)
+        self._max_toks = np.ones((b,), np.int32)
+        self._slot_req: List[Optional[Request]] = [None] * b
+        self._slot_toks: List[List[int]] = [[] for _ in range(b)]
+        self._slot_admitted = np.zeros((b,), np.int64)
+
+    @staticmethod
+    def _insert_impl(full_states, one_states, slot):
+        """Splice a batch-1 prefill state into batch row ``slot`` of the
+        shared tree (leaves are [n_groups, B, ...])."""
+        return jax.tree_util.tree_map(
+            lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+                f, o.astype(f.dtype), slot, axis=1),
+            full_states, one_states)
+
+    # -- admission ---------------------------------------------------------
+
+    def _admit(self, slot: int, req: Request, step: int,
+               out: Dict[int, Completion]) -> bool:
+        """Prefill ``req`` into ``slot``.  Returns True if the request
+        occupies the slot (False: it completed at prefill already)."""
+        prompt = list(int(t) for t in req.prompt)
+        s = len(prompt)
+        states1, logits, _ = self.engine.prefill(
+            jnp.asarray(prompt, jnp.int32)[None])
+        key = jax.random.PRNGKey(req.seed)
+        tok0 = int(sample_token(logits, key, req.temperature)[0, 0])
+
+        if tok0 == req.eos_id or req.max_tokens == 1:
+            reason = "eos" if tok0 == req.eos_id else "length"
+            out[req.rid] = Completion(req.rid, prompt, [tok0], reason,
+                                      step, step)
+            return False
+
+        self.states = self._insert(self.states, states1, jnp.int32(slot))
+        self._cur_tok[slot, 0] = tok0
+        self._cache_index[slot] = s
+        self._keys[slot] = np.asarray(key, np.uint32)
+        self._active[slot] = True
+        self._temp[slot] = req.temperature
+        self._eos[slot] = req.eos_id if req.eos_id >= 0 else -1
+        self._gen[slot] = 1
+        self._max_toks[slot] = req.max_tokens
+        self._slot_req[slot] = req
+        self._slot_toks[slot] = [tok0]
+        self._slot_admitted[slot] = step
+        return True
+
+    # -- the serve loop ----------------------------------------------------
+
+    def run(self, requests: Sequence[Request],
+            max_steps: int = 100_000) -> Dict[int, Completion]:
+        """Serve a trace of requests to completion.
+
+        Requests are admitted FIFO within arrival order as slots free
+        up.  Returns ``{rid: Completion}``; rids are assigned by
+        position for requests that don't carry one.
+        """
+        taken = {r.rid for r in requests if r.rid is not None}
+        if len(taken) != sum(r.rid is not None for r in requests):
+            raise ValueError("duplicate request rids")
+        reqs = []
+        next_rid = 0
+        for r in requests:
+            if r.rid is None:      # auto-assign, skipping explicit rids
+                while next_rid in taken:
+                    next_rid += 1
+                r = dataclasses.replace(r, rid=next_rid)
+                taken.add(next_rid)
+            reqs.append(r)
+        # validate the WHOLE trace before admitting anything: a raise
+        # mid-run would strand live slots and lose the completed work
+        # (`run` is re-entrant; stranded slots would leak into the next
+        # trace's results)
+        for r in reqs:
+            if len(r.prompt) < 1:
+                raise ValueError(f"request {r.rid}: empty prompt")
+            if r.max_tokens < 1:
+                raise ValueError(
+                    f"request {r.rid}: max_tokens must be >= 1, "
+                    f"got {r.max_tokens}")
+            self.engine._check_window(len(r.prompt), r.max_tokens)
+        pending = deque(sorted(reqs, key=lambda r: r.arrival))
+        ready: deque = deque()
+        out: Dict[int, Completion] = {}
+        step = 0               # simulated clock (jumps over idle gaps)
+        work_steps = 0         # decode dispatches actually performed
+
+        while pending or ready or self._active.any():
+            if work_steps > max_steps:
+                raise RuntimeError(
+                    f"scheduler exceeded max_steps={max_steps}")
+            while pending and pending[0].arrival <= step:
+                ready.append(pending.popleft())
+            for slot in range(self.num_slots):
+                # retry the same slot after an instant completion (EOS at
+                # prefill / max_tokens=1 never occupy it)
+                while ready and not self._active[slot]:
+                    self._admit(slot, ready.popleft(), step, out)
+
+            if not self._active.any():
+                # nothing decoding (the admission pass drained `ready`):
+                # jump time to the next arrival
+                if pending:
+                    step = max(step + 1, pending[0].arrival)
+                    continue
+                break
+
+            was_active = self._active.copy()
+            work_steps += 1
+            (self.states, tok, cache_index, keys, active, gen,
+             done) = self._step(
+                self.params, self.states, self._cur_tok,
+                self._cache_index, self._keys, self._active, self._temp,
+                self._eos, self._gen, self._max_toks)
+            # writable host copies (np.asarray of a jax array is read-only)
+            tok = np.array(tok)
+            self._cur_tok = tok[:, None].astype(np.int32)
+            self._cache_index = np.array(cache_index)
+            self._keys = np.array(keys)
+            self._active = np.array(active)
+            self._gen = np.array(gen)
+            done = np.asarray(done)
+
+            for slot in np.nonzero(was_active)[0]:
+                self._slot_toks[slot].append(int(tok[slot]))
+                if done[slot]:
+                    req = self._slot_req[slot]
+                    reason = ("eos" if int(tok[slot]) == req.eos_id
+                              else "length")
+                    out[req.rid] = Completion(
+                        req.rid, list(int(t) for t in req.prompt),
+                        self._slot_toks[slot], reason,
+                        int(self._slot_admitted[slot]), step)
+                    self._slot_req[slot] = None
+                    self._slot_toks[slot] = []
+            step += 1
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Synthetic workloads (arrival traces for benchmarks / the launcher)
+# ---------------------------------------------------------------------------
+
+def synthetic_workload(n_requests: int, vocab_size: int, *,
+                       max_prompt: int = 8, max_new: int = 16,
+                       mean_interarrival: float = 0.0,
+                       temperature_choices: Sequence[float] = (0.0, 0.7),
+                       eos_rate: float = 0.25, seed: int = 0,
+                       ) -> List[Request]:
+    """A seeded trace of requests with varied lengths/arrivals.
+
+    ``mean_interarrival`` is in decode steps (0 = a burst at t=0);
+    ``eos_rate`` is the fraction of requests given a random EOS id (which
+    may or may not ever be sampled — both paths are exercised).
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        if mean_interarrival > 0:
+            t += rng.exponential(mean_interarrival)
+        plen = int(rng.integers(1, max_prompt + 1))
+        eos = int(rng.integers(0, vocab_size)) \
+            if rng.random() < eos_rate else -1
+        reqs.append(Request(
+            prompt=rng.integers(0, vocab_size, size=plen).tolist(),
+            max_tokens=int(rng.integers(1, max_new + 1)),
+            temperature=float(rng.choice(list(temperature_choices))),
+            eos_id=eos, seed=int(rng.integers(0, 2**31 - 1)),
+            arrival=int(t), rid=i))
+    return reqs
+
+
+def oracle_completion(engine: ServeEngine, req: Request) -> List[int]:
+    """The per-request oracle: run ``req`` alone through the per-token
+    loop, then truncate at its EOS (inclusive).  The scheduler must
+    reproduce this token list exactly for every request in any trace."""
+    prompt = jnp.asarray(list(req.prompt), jnp.int32)[None]
+    full = engine.generate_loop(prompt, req.max_tokens,
+                                temperature=req.temperature, seed=req.seed)
+    gen = [int(t) for t in np.asarray(full)[0, prompt.shape[1]:]]
+    if req.eos_id >= 0 and req.eos_id in gen:
+        gen = gen[:gen.index(req.eos_id) + 1]
+    return gen

@@ -22,6 +22,27 @@ def test_plane_roundtrip(bits, m, seed):
     np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
 
 
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(2, 8),
+       m=st.integers(1, 7), rows=st.integers(1, 9),
+       cols=st.integers(1, 9))
+@settings(max_examples=25, deadline=None)
+def test_plane_roundtrip_random_widths_and_shapes(bits, m, rows, cols,
+                                                  seed):
+    """slice -> recombine is EXACT for any (weight_bits, bits_per_slice,
+    shape) combination — including slices wider than the magnitude
+    (m >= bits-1, a single plane) and ragged last slices."""
+    rng = np.random.default_rng(seed)
+    qmax = (1 << (bits - 1)) - 1
+    q = jnp.asarray(rng.integers(-qmax, qmax + 1, size=(rows, cols)),
+                    jnp.int32)
+    back = bitslice.pack_unpack_roundtrip(q, bits, m)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+    # the plane values themselves fit the differential int8 cell range
+    planes = bitslice.slice_planes_signed(q, bits, m)
+    lim = (1 << min(m, bits - 1)) - 1
+    assert int(jnp.max(jnp.abs(planes))) <= lim
+
+
 @given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8]),
        m=st.sampled_from([1, 2]))
 @settings(max_examples=20, deadline=None)

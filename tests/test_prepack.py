@@ -103,6 +103,53 @@ def test_packed_path_skips_shadow_matmul():
 
 
 # ---------------------------------------------------------------------------
+# Forward-equivalence property: packed forward == QAT forward, bit-exact,
+# over random shapes / slicings / weights
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1),
+       mode=st.sampled_from(["int8", "pum"]),
+       bits_per_slice=st.sampled_from([1, 2, 4]),
+       m=st.integers(1, 6), k=st.integers(1, 48), n=st.integers(1, 24))
+@settings(max_examples=20, deadline=None)
+def test_packed_forward_matches_qat_property(seed, mode, bits_per_slice,
+                                             m, k, n):
+    """``pack_weight`` then forward == the per-call QAT forward value,
+    bit-exactly, for random int8 weights and arbitrary MVM shapes.
+
+    The weight is built *from* random int8 values times a scale, so the
+    QAT path's quantiser must land on exactly those integers and the
+    packed planes must recombine to them — any off-by-one in slicing,
+    differential encoding or scale handling breaks exact equality."""
+    rng = np.random.default_rng(seed)
+    wq = rng.integers(-127, 128, size=(k, n))
+    w = jnp.asarray(wq * (np.max(np.abs(wq)) or 1) / 127.0 * 0.01,
+                    jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    cfg = PUMConfig(mode=mode, weight_bits=8, bits_per_slice=bits_per_slice)
+    y_qat = pum_linear(x, w, cfg)
+    y_packed = pum_linear(x, prepack.pack_weight(w, cfg), cfg)
+    np.testing.assert_array_equal(np.asarray(y_qat), np.asarray(y_packed))
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       bits_per_slice=st.sampled_from([1, 2, 4]))
+@settings(max_examples=15, deadline=None)
+def test_pack_planes_recombine_to_wq_property(seed, bits_per_slice):
+    """The packed crossbar image is lossless: ``combine_planes`` over the
+    stored planes reproduces the stored recombined int8 weight exactly."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(17, 11)) * 0.2, jnp.float32)
+    cfg = PUMConfig(mode="pum", weight_bits=8,
+                    bits_per_slice=bits_per_slice)
+    p = prepack.pack_weight(w, cfg)
+    back = bitslice.combine_planes(
+        jnp.moveaxis(p.planes.astype(jnp.int32), -3, 0), bits_per_slice)
+    np.testing.assert_array_equal(np.asarray(back),
+                                  np.asarray(p.wq, np.int32))
+
+
+# ---------------------------------------------------------------------------
 # Round-trip property (shim-compatible hypothesis)
 # ---------------------------------------------------------------------------
 

@@ -31,17 +31,35 @@ def test_int8_mode_close_to_float():
 
 def test_pum_mode_matches_int_path_exactly():
     """pum (bit-sliced, no noise) == same quantisation as a direct int
-    matmul — the decomposition is lossless."""
+    matmul — the decomposition is lossless.  Activations carry one scale
+    per input row (per-MVM DAC range; keeps batch rows independent for
+    continuous batching), weights one per tensor."""
     x, w = _data(3)
     cfg = PUMConfig(mode="pum", weight_bits=8, bits_per_slice=2)
     y_pum = pum_linear(x, w, cfg)
     # reconstruct expected: quantise both, int matmul, dequantise
     from repro.core import bitslice
-    xq, xs = bitslice.quantize_symmetric(x, 8)
+    xq, xs = bitslice.quantize_symmetric(x, 8, axis=x.ndim - 1)
     wq, ws = bitslice.quantize_symmetric(w, 8)
     want = (np.asarray(xq) @ np.asarray(wq)).astype(np.float32) \
-        * float(xs) * float(ws)
+        * np.asarray(xs) * float(ws)
     np.testing.assert_allclose(np.asarray(y_pum), want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["int8", "pum"])
+def test_quantised_rows_independent_of_cobatch(mode):
+    """Per-input-row activation scales: a row's output is bit-identical
+    whether it runs alone or co-batched with arbitrary other rows — the
+    invariant continuous batching's oracle equivalence rests on."""
+    x, w = _data(11)
+    cfg = PUMConfig(mode=mode)
+    full = np.asarray(pum_linear(x, w, cfg))
+    solo = np.asarray(pum_linear(x[2:3], w, cfg))
+    np.testing.assert_array_equal(full[2:3], solo)
+    # co-batch with rescaled rows (would shift a shared per-tensor scale)
+    mixed = jnp.concatenate([x[2:3], x[3:] * 100.0], axis=0)
+    np.testing.assert_array_equal(np.asarray(pum_linear(mixed, w, cfg))[:1],
+                                  solo)
 
 
 def test_pum_kernel_path_matches_oracle_path():
