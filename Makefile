@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist test-serve quickstart bench bench-smoke
+.PHONY: test test-dist test-serve quickstart bench bench-smoke \
+	bench-baseline bench-check
 
 # tier-1 verify; test_distributed.py spawns its own subprocesses with
 # XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -25,6 +26,22 @@ quickstart:
 bench:
 	$(PY) -m benchmarks.run --only micro
 
-# CI smoke run: same code paths on tiny shapes
+# smoke run: same code paths on tiny shapes.  Writes to the gitignored
+# .fresh path so a casual run never dirties the committed baseline
 bench-smoke:
-	$(PY) -m benchmarks.run --only micro --small
+	$(PY) -m benchmarks.run --only micro --small --json BENCH.small.fresh.json
+
+# intentionally regenerate the committed bench-check baseline
+bench-baseline:
+	$(PY) -m benchmarks.run --only micro --small --json BENCH.small.json
+
+# bench-regression gate: measure fresh, diff against the committed
+# BENCH.small.json baseline, fail beyond TOL percent (compare.py's
+# default 25 suits like-for-like hardware; CI widens it and IGNOREs the
+# full-run wallclock rows — shared runners are noisy hardware)
+TOL ?= 25
+IGNORE ?=
+bench-check:
+	$(PY) -m benchmarks.run --only micro --small --json BENCH.small.fresh.json
+	$(PY) -m benchmarks.compare --baseline BENCH.small.json \
+		--fresh BENCH.small.fresh.json --tolerance $(TOL) $(IGNORE)

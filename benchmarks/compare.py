@@ -1,0 +1,124 @@
+"""Bench-regression gate: diff a fresh BENCH json against the committed
+baseline and fail on regressions beyond a per-metric tolerance.
+
+``python -m benchmarks.compare --baseline BENCH.small.json
+--fresh BENCH.small.fresh.json [--tolerance 25] [--ignore GLOB ...]``
+
+Direction-aware: for timing-ish units (``us_per_call``, ``bytes``, …)
+higher is worse; for rate-ish units (``tok/s``, ``MB/s``, speedup
+``x``) lower is worse.  A metric present in the baseline but missing
+from the fresh run is a regression too (silent coverage loss).  New
+metrics are reported informationally.
+
+Prints a markdown diff table (pipe into ``$GITHUB_STEP_SUMMARY`` in CI)
+and exits 1 iff any regression exceeded tolerance.  CI timing on shared
+runners is noisy — the committed default of 25% suits like-for-like
+hardware; the CI workflow passes a wider ``--tolerance`` (see
+``make bench-check TOL=...``).
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+from typing import Dict, Tuple
+
+# units where a larger value is a slowdown/cost; anything else is a rate
+LOWER_IS_BETTER_UNITS = {"us_per_call", "us", "ms", "s", "bytes", "cycles",
+                         "pJ", "nJ", "mm2"}
+
+
+def load(path: str) -> Dict[str, Tuple[float, str]]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {name: (float(rec["value"]), str(rec.get("unit", "")))
+            for name, rec in payload.items()}
+
+
+def pct_change(base: float, fresh: float) -> float:
+    if base == 0:
+        return 0.0 if fresh == 0 else float("inf")
+    return (fresh - base) / abs(base) * 100.0
+
+
+def compare(baseline: Dict[str, Tuple[float, str]],
+            fresh: Dict[str, Tuple[float, str]],
+            tolerance: float, ignore: list) -> Tuple[list, bool]:
+    """Returns (markdown table rows, any_regression)."""
+    rows = []
+    bad = False
+
+    def ignored(name: str) -> bool:
+        return any(fnmatch.fnmatch(name, pat) for pat in ignore)
+
+    for name in sorted(set(baseline) | set(fresh)):
+        if name not in baseline:
+            v, unit = fresh[name]
+            rows.append((name, "—", f"{v:.4g} {unit}", "new", "ℹ️ new"))
+            continue
+        base_v, unit = baseline[name]
+        if name not in fresh:
+            if ignored(name):
+                continue
+            rows.append((name, f"{base_v:.4g} {unit}", "—", "missing",
+                         "❌ missing"))
+            bad = True
+            continue
+        fresh_v, _ = fresh[name]
+        delta = pct_change(base_v, fresh_v)
+        worse = delta > 0 if unit in LOWER_IS_BETTER_UNITS else delta < 0
+        regressed = worse and abs(delta) > tolerance
+        if ignored(name):
+            status = "⏭ ignored"
+        elif regressed:
+            status = f"❌ regressed (> {tolerance:g}%)"
+            bad = True
+        elif worse:
+            status = "⚠️ worse (within tolerance)"
+        elif abs(delta) > tolerance:
+            status = "✅ improved"
+        else:
+            status = "✓ ok"
+        rows.append((name, f"{base_v:.4g} {unit}", f"{fresh_v:.4g}",
+                     f"{delta:+.1f}%", status))
+    return rows, bad
+
+
+def render_markdown(rows: list, tolerance: float) -> str:
+    out = [f"### Bench diff (tolerance {tolerance:g}%)", "",
+           "| metric | baseline | fresh | Δ | status |",
+           "|---|---:|---:|---:|---|"]
+    for name, base, fresh, delta, status in rows:
+        out.append(f"| `{name}` | {base} | {fresh} | {delta} | {status} |")
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH.small.json",
+                    help="committed baseline json")
+    ap.add_argument("--fresh", default="BENCH.small.fresh.json",
+                    help="freshly measured json")
+    ap.add_argument("--tolerance", type=float, default=25.0,
+                    help="per-metric regression tolerance in percent")
+    ap.add_argument("--ignore", action="append", default=[],
+                    help="glob of metric names to exclude from gating "
+                         "(repeatable)")
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    fresh = load(args.fresh)
+    rows, bad = compare(baseline, fresh, args.tolerance, args.ignore)
+    print(render_markdown(rows, args.tolerance))
+    if bad:
+        print(f"\nFAIL: regression(s) beyond {args.tolerance:g}% vs "
+              f"{args.baseline}", file=sys.stderr)
+        return 1
+    print(f"\nOK: no regression beyond {args.tolerance:g}% "
+          f"({len(rows)} metrics)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

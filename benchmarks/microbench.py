@@ -17,12 +17,17 @@ Row = Tuple[str, float, str]
 
 
 def _time(fn: Callable[[], object], iters: int = 5, warmup: int = 2) -> float:
+    """Best-of-``iters`` µs per call.  The minimum, not the mean: scheduler
+    preemptions on shared CI runners only ever add time, so the min is the
+    low-variance estimator the bench-regression gate needs."""
     for _ in range(warmup):
         jax.block_until_ready(fn())
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(iters):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn())
-    return (time.perf_counter() - t0) / iters * 1e6
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def bench_aes_bulk(small: bool = False) -> List[Row]:
@@ -171,6 +176,74 @@ def bench_serve_batch(small: bool = False) -> List[Row]:
         toks = sum(len(c.tokens) for c in out.values())
         rows.append((f"serve_batch/slots{slots}_toks_per_s", toks / dt,
                      "tok/s"))
+    rows.extend(_bench_serve_paged(cfg, params, small))
+    return rows
+
+
+def _bench_serve_paged(cfg, params, small: bool) -> List[Row]:
+    """Mixed short/long-prompt workload: paged KV + chunked prefill vs
+    the contiguous per-slot cache.
+
+    The trace mixes one long prompt into a stream of short ones with
+    prompt lengths the warm-up has NOT seen — real traffic always
+    carries novel lengths.  The contiguous scheduler prefills each
+    novel length as a fresh XLA shape (compile on the serving path);
+    chunked prefill streams every prompt through one block-sized shape,
+    and the paged pool is provisioned at half the contiguous footprint
+    because short co-tenants never use their worst-case window.
+    """
+    import numpy as np
+
+    from repro.serve import ContinuousBatchingScheduler, Request
+
+    slots = 2 if small else 4
+    gen = 6 if small else 16
+    block = 4
+    max_len = 40 if small else 96
+    long_plen = max_len - gen - 1          # one request pins the window
+    rng = np.random.default_rng(11)
+
+    def trace(lens):
+        return [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                            size=l).tolist(),
+                        max_tokens=gen, seed=int(rng.integers(2**31)),
+                        rid=i, arrival=i // slots)
+                for i, l in enumerate(lens)]
+
+    short = [3, 8, 9, 12] if small else [3, 4, 8, 9, 10, 11, 12, 13]
+    lens = short + [long_plen] + short
+    width = -(-max_len // block)
+    kwargs = dict(num_slots=slots, max_len=max_len)
+    rows: List[Row] = []
+    results = {}
+    for name, extra in (
+            ("contiguous", {}),
+            ("paged", dict(kv_block_size=block,
+                           num_kv_blocks=(slots * width) // 2,
+                           chunked_prefill=True))):
+        sched = ContinuousBatchingScheduler(cfg, params, **kwargs, **extra)
+        # warm prompts of 5/6/7 tokens compile the decode step and, for
+        # the paged engine, EVERY chunk shape (one full block + ragged
+        # tails 1/2/3) — the measured lengths are disjoint from these,
+        # so the contiguous engine still pays its per-novel-length
+        # prefill compiles inside the timed window while chunked
+        # prefill runs compile-free, which is exactly the contrast
+        # real traffic with novel prompt lengths produces
+        warm = [Request(prompt=[1] * (block + 1 + i), max_tokens=2,
+                        seed=0, rid=i) for i in range(block - 1)]
+        sched.run(warm)
+        reqs = trace(lens)
+        t0 = time.perf_counter()
+        out = sched.run(reqs)
+        dt = time.perf_counter() - t0
+        toks = sum(len(c.tokens) for c in out.values())
+        results[name] = toks / dt
+        rows.append((f"serve_batch/mixed_{name}_toks_per_s", toks / dt,
+                     "tok/s"))
+        rows.append((f"serve_batch/mixed_{name}_kv_bytes",
+                     sched.kv_cache_bytes(), "bytes"))
+    rows.append(("serve_batch/mixed_paged_speedup",
+                 results["paged"] / results["contiguous"], "x"))
     return rows
 
 

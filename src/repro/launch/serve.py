@@ -8,6 +8,12 @@ Continuous batching (slot-based scheduler over a synthetic arrival
 trace):
 ``python -m repro.launch.serve --arch glm4-9b --batch-slots 4
 --workload poisson --requests 16 --gen 16``
+
+Paged KV cache + chunked prefill (PR 4: shared block pool instead of
+per-slot windows; prompts streamed in block-size chunks):
+``python -m repro.launch.serve --arch glm4-9b --batch-slots 4
+--workload poisson --requests 16 --gen 16 --kv-block-size 16
+--num-kv-blocks 24 --chunked-prefill``
 """
 from __future__ import annotations
 
@@ -50,6 +56,18 @@ def main():
                          "(default: 4x slots)")
     ap.add_argument("--seed", type=int, default=0,
                     help="workload trace seed for --batch-slots")
+    ap.add_argument("--kv-block-size", type=int, default=0,
+                    help="page the KV cache into blocks of this many "
+                         "tokens over one shared pool (0 = contiguous "
+                         "per-slot windows)")
+    ap.add_argument("--num-kv-blocks", type=int, default=0,
+                    help="pool size for --kv-block-size (default: the "
+                         "contiguous equivalent, slots * ceil(max_len / "
+                         "block); pass less to actually save memory)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="stream prompts through the decode loop in "
+                         "block-size chunks interleaved with running "
+                         "decodes (requires --kv-block-size)")
     args = ap.parse_args()
 
     cfg = configs.get_reduced(args.arch)
@@ -86,7 +104,9 @@ def serve_continuous(cfg, params, args) -> None:
     max_len = args.prompt_len + args.gen + 1
     sched = ContinuousBatchingScheduler(
         cfg, params, num_slots=args.batch_slots, max_len=max_len,
-        prepack=not args.no_prepack)
+        prepack=not args.no_prepack, kv_block_size=args.kv_block_size,
+        num_kv_blocks=args.num_kv_blocks,
+        chunked_prefill=args.chunked_prefill)
     reqs = synthetic_workload(
         n, cfg.vocab_size, max_prompt=args.prompt_len, max_new=args.gen,
         mean_interarrival=0.0 if args.workload == "burst" else 2.0,
@@ -98,7 +118,12 @@ def serve_continuous(cfg, params, args) -> None:
     eos_n = sum(c.finish_reason == "eos" for c in out.values())
     lat = [c.finished_step - r.arrival for r, c in
            ((r, out[r.rid]) for r in reqs)]
+    kv = (f"paged(block={args.kv_block_size}, "
+          f"blocks={sched.num_kv_blocks}"
+          f"{', chunked' if args.chunked_prefill else ''})"
+          if args.kv_block_size > 0 else "contiguous")
     print(f"arch={args.arch} mode={args.pum_mode} slots={args.batch_slots} "
+          f"kv={kv} ({sched.kv_cache_bytes() / 1e6:.2f} MB) "
           f"workload={args.workload} served {len(out)} requests "
           f"({toks} tokens) in {dt:.2f}s ({toks / dt:.1f} tok/s incl. "
           f"compile)")

@@ -47,6 +47,29 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def make_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> Params:
+    """One shared pool of KV blocks instead of per-slot windows.
+
+    ``num_blocks`` counts *physical* blocks, including the reserved
+    trash block at id 0 (``serve.kv_pool`` allocates usable ids from 1).
+    Slots address it through a per-slot block table; there is no batch
+    axis — that's the whole point.
+    """
+    hd = cfg.resolved_head_dim
+    shape = (num_blocks, block_size, cfg.num_kv_heads, hd)
+    return {"k_pool": jnp.zeros(shape, dtype),
+            "v_pool": jnp.zeros(shape, dtype)}
+
+
+def paged_cache_shape(cfg: ModelConfig, num_blocks: int, block_size: int,
+                      dtype=jnp.bfloat16) -> Params:
+    hd = cfg.resolved_head_dim
+    sds = jax.ShapeDtypeStruct
+    shape = (num_blocks, block_size, cfg.num_kv_heads, hd)
+    return {"k_pool": sds(shape, dtype), "v_pool": sds(shape, dtype)}
+
+
 def cache_shape(cfg: ModelConfig, batch: int, max_len: int,
                 dtype=jnp.bfloat16) -> Params:
     hd = cfg.resolved_head_dim
@@ -145,12 +168,53 @@ def _chunked_attention(q, k, v, q_offset, softcap):
     return out[:, :s]
 
 
+def _paged_update_and_gather(cache: Params, k: jax.Array, v: jax.Array,
+                             block_table: jax.Array, cache_index: jax.Array,
+                             kv_len: Optional[int],
+                             ) -> Tuple[Params, jax.Array, jax.Array,
+                                        jax.Array]:
+    """Scatter this step's K/V through the block table into the shared
+    pool, then gather each row's logical cache view back out.
+
+    k/v: [B, S, KV, hd] new entries for rows starting at positions
+    ``cache_index`` ([B] int32).  ``block_table``: [B, W] physical block
+    ids (0 = the trash block: empty/retired rows write there and their
+    garbage is never attended).  Returns the updated cache, the gathered
+    [B, T, KV, hd] views, and the [B, S] absolute query positions.
+
+    ``kv_len`` crops the gathered view from ``W * block_size`` back to
+    the engine's window so the attention reduction shapes — hence the
+    compiled reduction order, hence bitwise numerics — match the
+    contiguous cache exactly.
+    """
+    b, s = k.shape[:2]
+    bs = cache["k_pool"].shape[1]
+    w = block_table.shape[1]
+    pos = cache_index[:, None] + jnp.arange(s)[None, :]            # [B, S]
+    slot_col = jnp.clip(pos // bs, 0, w - 1)
+    phys = jnp.take_along_axis(block_table, slot_col, axis=1)      # [B, S]
+    off = pos % bs
+    k_pool = cache["k_pool"].at[phys, off].set(
+        k.astype(cache["k_pool"].dtype))
+    v_pool = cache["v_pool"].at[phys, off].set(
+        v.astype(cache["v_pool"].dtype))
+    kvh, hd = k_pool.shape[2:]
+    k_all = k_pool[block_table].reshape(b, w * bs, kvh, hd)
+    v_all = v_pool[block_table].reshape(b, w * bs, kvh, hd)
+    if kv_len is not None and kv_len < w * bs:
+        k_all = k_all[:, :kv_len]
+        v_all = v_all[:, :kv_len]
+    return {"k_pool": k_pool, "v_pool": v_pool}, k_all, v_all, pos
+
+
 def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
               positions: jax.Array,
               cache: Optional[Params] = None,
               cache_index: Optional[jax.Array] = None,
               cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
               use_rope: bool = True,
+              block_table: Optional[jax.Array] = None,
+              kv_len: Optional[int] = None,
               ) -> Tuple[jax.Array, Optional[Params]]:
     """x: [B, S, D].  Modes:
       * train/prefill (cache None, cross_kv None): causal self-attention;
@@ -159,6 +223,12 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         ``cache_index`` may be a [B] vector — continuous batching, where
         every slot sits at a different cache depth (write, RoPE position
         and causal mask are then all per-row).
+      * paged decode (cache holds ``k_pool``/``v_pool`` and
+        ``block_table`` is set): same semantics, but rows address one
+        shared block pool through their block-table row instead of a
+        private contiguous window.  ``kv_len`` is the engine window the
+        gathered view is cropped to (bit-exactness vs the contiguous
+        cache).
       * cross attention (cross_kv set): encoder-decoder attention.
     """
     b, s, d = x.shape
@@ -178,7 +248,29 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     else:
         k, v = cross_kv
 
-    if cache is not None and cross_kv is None:
+    if cache is not None and "k_pool" in cache and cross_kv is None:
+        # paged decode / chunked prefill: per-row (block, offset) scatter
+        # and block-table gather over the shared pool
+        cache_index = jnp.asarray(cache_index)
+        assert cache_index.ndim == 1, \
+            "paged attention is slot-wise: cache_index must be [B]"
+        assert block_table is not None, \
+            "paged attention requires a block_table"
+        # the paged path reduces with plain softmax: beyond this the
+        # contiguous oracle switches to online-softmax (_chunked_attention,
+        # a different reduction order) and the [B,S,T] score tensor stops
+        # being small — stream longer prompts in block-size chunks instead
+        assert s <= 2 * CHUNK_Q, \
+            f"paged prefill chunk of {s} tokens exceeds {2 * CHUNK_Q}; " \
+            f"enable chunked_prefill to stream long prompts"
+        cache, k_all, v_all, qpos = _paged_update_and_gather(
+            cache, k, v, block_table, cache_index, kv_len)
+        kpos = jnp.arange(k_all.shape[1])
+        mask = kpos[None, None, :] <= qpos[..., None]              # [B,S,T]
+        out = _plain_attention(q, k_all, v_all, mask,
+                               cfg.attn_logit_softcap,
+                               ibert_mode=pum.ibert)
+    elif cache is not None and cross_kv is None:
         # decode/prefill-into-cache: write the new K/V at cache_index —
         # a scalar (whole batch at one depth) or a [B] vector (slot-wise
         # decode: each row writes/attends at its own depth)

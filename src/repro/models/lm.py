@@ -117,6 +117,33 @@ def init_state(cfg: ModelConfig, batch: int, max_len: int,
     return out
 
 
+def init_paged_state(cfg: ModelConfig, batch: int, max_len: int, *,
+                     num_blocks: int, block_size: int) -> List[Any]:
+    """Decode states with attention KV paged into one shared block pool.
+
+    Attention period-positions get ``[n_groups, num_blocks + 1,
+    block_size, kv_heads, head_dim]`` pools (physical block 0 is the
+    reserved trash block — ``serve.kv_pool``); recurrent families keep
+    their per-slot ``[n_groups, batch, ...]`` rows.  Total KV storage is
+    ``(num_blocks + 1) * block_size`` positions per layer group instead
+    of ``batch * max_len``.
+    """
+    p_len = transformer.period(cfg)
+    n_groups = cfg.num_layers // p_len
+    out = []
+    for j in range(p_len):
+        if transformer.mixer_kind(cfg, j) == "attn":
+            one = attention.make_paged_cache(cfg, num_blocks + 1,
+                                             block_size)
+        else:
+            one = transformer.make_block_state(cfg, j, batch, max_len)
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy()
+            if a.size else a, one)
+        out.append(stacked)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
@@ -162,6 +189,8 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
             remat: bool = True,
             scan_layers: bool = True,
             last_only: bool = False,
+            block_table: Optional[jax.Array] = None,
+            kv_len: Optional[int] = None,
             ) -> Tuple[jax.Array, Optional[List[Any]],
                        Dict[str, jax.Array]]:
     """tokens: [B, S] int32 -> (logits, states', aux).
@@ -173,6 +202,9 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     The vector form threads through all state families — dense KV caches
     write/mask per row; xlstm and ssm states are per-row recurrences that
     never index the cache, so the position only shapes RoPE.
+    Paged KV (states from ``init_paged_state``): pass the per-row
+    ``block_table`` [B, W] and the engine window ``kv_len``; attention
+    then scatters/gathers through the shared block pool.
     VLM: image_embeds [B, N, D] prepended.  Enc-dec: encoder_frames
     [B, T, D] runs the encoder (or pass precomputed ``encoder_out``).
     """
@@ -215,7 +247,8 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
             x, st_new, aux = transformer.apply_block(
                 blk_params[j], x, cfg, j, positions=positions,
                 state=st, cache_index=cache_index,
-                encoder_out=encoder_out)
+                encoder_out=encoder_out, block_table=block_table,
+                kv_len=kv_len)
             new_states.append(st_new if st_new is not None else {})
             for k, v in aux.items():
                 aux_acc[k] = aux_acc.get(k, 0.0) + v

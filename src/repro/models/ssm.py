@@ -103,8 +103,15 @@ def mamba(p: Params, x: jax.Array, cfg: ModelConfig, *,
         y = _scan_train(xc, dt, b_t, c_t, a, p["d_skip"])
         new_state = None
     elif s > 1:
-        # prefill into state: full-seq compute + final recurrent state
-        xc = jax.nn.silu(_causal_conv_train(xi, p["conv_w"], p["conv_b"]))
+        # prefill into state: full-seq compute + final recurrent state.
+        # The causal conv must see the carried window, not zero padding —
+        # chunked prefill re-enters here mid-prompt (for a fresh state
+        # the window IS zeros, so this degenerates to the old padding
+        # bit-exactly).
+        ext = jnp.concatenate(
+            [state["conv"], xi.astype(state["conv"].dtype)], axis=1)
+        xc = _causal_conv_train(ext, p["conv_w"], p["conv_b"])
+        xc = jax.nn.silu(xc[:, cfg.ssm_conv_width - 1:])
         dt, b_t, c_t, a = _selective_params(p, xc, cfg)
 
         def step(h, args):
@@ -118,15 +125,19 @@ def mamba(p: Params, x: jax.Array, cfg: ModelConfig, *,
         xs_t = tuple(t.swapaxes(0, 1) for t in (xc, dt, b_t, c_t))
         h, ys = jax.lax.scan(step, state["h"].astype(jnp.float32), xs_t)
         y = ys.swapaxes(0, 1)
-        window = jnp.concatenate(
-            [state["conv"], xi.astype(state["conv"].dtype)], axis=1)
-        new_state = {"h": h, "conv": window[:, -(cfg.ssm_conv_width - 1):]}
+        new_state = {"h": h, "conv": ext[:, -(cfg.ssm_conv_width - 1):]}
     else:
-        # decode: roll the conv window, single recurrence step
+        # decode: roll the conv window, single recurrence step.  The
+        # taps accumulate in the same order as ``_causal_conv_train``
+        # (newest first), so a 1-token chunked-prefill step is
+        # bit-identical to the same token inside a longer chunk.
         window = jnp.concatenate([state["conv"],
                                   xi.astype(state["conv"].dtype)], axis=1)
-        xc = jnp.einsum("bwi,iw->bi", window[:, -cfg.ssm_conv_width:, :],
-                        p["conv_w"]) + p["conv_b"]
+        win = window[:, -cfg.ssm_conv_width:, :]
+        xc = win[:, -1] * p["conv_w"][:, -1]
+        for i in range(1, cfg.ssm_conv_width):
+            xc = xc + win[:, -1 - i] * p["conv_w"][:, -1 - i]
+        xc = xc + p["conv_b"]
         xc = jax.nn.silu(xc)[:, None, :]                   # [B, 1, inner]
         dt, b_t, c_t, a = _selective_params(p, xc, cfg)
         da = jnp.exp(dt[:, 0, :, None] * a)                # [B, inner, st]

@@ -115,9 +115,12 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, layer_idx: int, *,
                 state: Optional[Params] = None,
                 cache_index: Optional[jax.Array] = None,
                 encoder_out: Optional[jax.Array] = None,
+                block_table: Optional[jax.Array] = None,
+                kv_len: Optional[int] = None,
                 ) -> Tuple[jax.Array, Optional[Params],
                            Dict[str, jax.Array]]:
-    """Returns (x, new_state, aux_losses)."""
+    """Returns (x, new_state, aux_losses).  ``block_table``/``kv_len``
+    select the paged KV path in self-attention (serve.kv_pool)."""
     mk = mixer_kind(cfg, layer_idx)
     fk = ffn_kind(cfg, layer_idx)
     aux: Dict[str, jax.Array] = {}
@@ -127,7 +130,8 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, layer_idx: int, *,
         h, state = attention.attention(
             p["attn"], h, cfg, positions=positions, cache=state,
             cache_index=cache_index,
-            use_rope=not cfg.is_encoder_decoder)
+            use_rope=not cfg.is_encoder_decoder,
+            block_table=block_table, kv_len=kv_len)
     elif mk == "mamba":
         h, state = ssm.mamba(p["mamba"], h, cfg, state=state)
     elif mk == "mlstm":

@@ -1,4 +1,6 @@
 from repro.serve.engine import ServeEngine, make_decode_step, sample_token
+from repro.serve.kv_pool import (BlockAllocator, blocks_needed,
+                                 kv_cache_bytes, table_width)
 from repro.serve.scheduler import (Completion, ContinuousBatchingScheduler,
                                    Request, make_slot_step,
                                    oracle_completion, synthetic_workload)

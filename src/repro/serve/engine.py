@@ -24,21 +24,29 @@ from repro.config import ModelConfig
 from repro.models import lm
 
 
-def make_decode_step(cfg: ModelConfig, scan_layers: bool = True):
+def make_decode_step(cfg: ModelConfig, scan_layers: bool = True,
+                     kv_len: Optional[int] = None):
     """(params, states, token [B,1], cache_index, extras) ->
     (logits [B,1,V], states').
 
     ``cache_index`` is a scalar for lockstep batched decode, or an int32
     ``[B]`` vector for slot-wise decode (continuous batching): each batch
     row advances at its own cache depth, with per-row KV writes, RoPE
-    positions, and causal masks (``models.lm.forward`` handles both)."""
+    positions, and causal masks (``models.lm.forward`` handles both).
+
+    For a paged KV cache (states from ``lm.init_paged_state``), pass the
+    per-row ``block_table`` at call time and build the step with
+    ``kv_len`` = the engine window, so the gathered pool view matches the
+    contiguous cache's reduction shapes bit-exactly."""
 
     def decode_step(params, states, token, cache_index, *,
-                    encoder_out: Optional[jax.Array] = None):
+                    encoder_out: Optional[jax.Array] = None,
+                    block_table: Optional[jax.Array] = None):
         logits, states, _ = lm.forward(
             params, token, cfg, states=states, cache_index=cache_index,
             encoder_out=encoder_out, last_only=True,
-            scan_layers=scan_layers)
+            scan_layers=scan_layers, block_table=block_table,
+            kv_len=kv_len)
         return logits, states
 
     return decode_step

@@ -1,0 +1,237 @@
+"""Paged KV-cache pool: fixed-size token blocks over one shared store.
+
+DARTH-PUM treats the memory arrays as a pooled compute+storage resource
+the coordinator allocates per kernel (PUMA's tile-granular allocation);
+the serving analogue is the KV cache.  The contiguous layout reserves a
+whole ``[max_len]`` window per decode slot, so one long request strands
+``slots * max_len`` worth of storage however short its co-tenants are.
+Here the cache is a single pool of ``num_blocks`` fixed-size token
+blocks (``[num_blocks, block_size, kv_heads, head_dim]`` per layer
+group) and each request owns just the blocks its tokens actually touch,
+mapped through a per-slot *block table*.
+
+Layout conventions
+------------------
+* Physical block 0 is the **trash block**: rows whose slot is empty or
+  retired carry an all-zero block table, so their masked decode writes
+  land there instead of corrupting live data.  :class:`BlockAllocator`
+  therefore hands out ids ``1 .. num_blocks`` over a pool allocated
+  with ``num_blocks + 1`` physical blocks.
+* A request admitted with ``prompt_len`` and ``max_tokens`` owns
+  ``blocks_needed(prompt_len, max_tokens, block_size)`` blocks for its
+  whole lifetime (positions ``0 .. prompt_len + max_tokens - 2``; the
+  final sampled token is never written back).  Allocation is up-front,
+  so a request never runs out of blocks mid-decode.
+* The block table is host state (a small ``[slots, table_width]`` int32
+  array shipped with every step); the pools live inside the donated
+  decode-state tree, so per-token writes are in-place scatters.
+
+Why gathers stay bit-exact: the gathered per-row view is sliced back to
+the engine's ``max_len`` (``kv_len`` in ``models.attention``), so the
+attention reduction shapes — and therefore the compiled reduction order
+— match the contiguous cache exactly; masked lanes contribute exact
+zeros either way.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import transformer
+
+TRASH_BLOCK = 0
+
+
+def blocks_needed(prompt_len: int, max_tokens: int, block_size: int) -> int:
+    """Blocks a request owns for its lifetime.
+
+    KV is written for every prompt token and for every *fed-back*
+    generated token; the last of ``max_tokens`` sampled tokens is never
+    fed back, so the deepest written position is
+    ``prompt_len + max_tokens - 2``.
+    """
+    positions = prompt_len + max_tokens - 1
+    return -(-positions // block_size)
+
+
+def table_width(max_len: int, block_size: int) -> int:
+    """Block-table columns needed to address ``max_len`` positions."""
+    return -(-max_len // block_size)
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over block ids ``first_id ..
+    first_id + num_blocks - 1`` (id 0 stays reserved for the trash
+    block under the default ``first_id=1``).
+
+    FIFO reuse keeps allocation order deterministic for a given
+    admit/retire trace.  ``alloc`` is all-or-nothing: a request that
+    does not fit leaves the free list untouched (the scheduler keeps it
+    queued rather than admitting it half-funded).
+    """
+
+    def __init__(self, num_blocks: int, first_id: int = TRASH_BLOCK + 1):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self.first_id = first_id
+        self._free = deque(range(first_id, first_id + num_blocks))
+        self._live: set = set()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_blocks(self) -> int:
+        return len(self._live)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Claim ``n`` blocks, or return None (not partial) if the pool
+        cannot fund the request right now."""
+        if n < 0:
+            raise ValueError(f"cannot alloc {n} blocks")
+        if n > len(self._free):
+            return None
+        ids = [self._free.popleft() for _ in range(n)]
+        self._live.update(ids)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        for i in ids:
+            if i not in self._live:
+                raise ValueError(
+                    f"freeing block {i} that is not live (double-free or "
+                    f"foreign id)")
+            self._live.remove(i)
+            self._free.append(i)
+
+
+# ---------------------------------------------------------------------------
+# State-tree helpers: paged pools are shared (no slot axis); recurrent
+# states keep their per-slot rows
+# ---------------------------------------------------------------------------
+
+def is_paged_cache(state: Any) -> bool:
+    return isinstance(state, dict) and "k_pool" in state
+
+
+def slot_states_view(cfg: ModelConfig, states: List[Any],
+                     slot: jax.Array) -> List[Any]:
+    """A batch-1 view of ``slot`` for chunked prefill: recurrent leaves
+    (axis 1 = slots under the group stacking) are sliced to one row;
+    shared paged pools pass through whole."""
+    out = []
+    for st in states:
+        if is_paged_cache(st) or not st:
+            out.append(st)
+        else:
+            out.append(jax.tree_util.tree_map(
+                lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=1),
+                st))
+    return out
+
+
+def slot_states_merge(cfg: ModelConfig, states: List[Any], one: List[Any],
+                      slot: jax.Array) -> List[Any]:
+    """Inverse of :func:`slot_states_view`: write the updated batch-1
+    recurrent rows back at ``slot``; adopt the updated pools whole."""
+    out = []
+    for st, st1 in zip(states, one):
+        if is_paged_cache(st) or not st:
+            out.append(st1)
+        else:
+            out.append(jax.tree_util.tree_map(
+                lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+                    f, o.astype(f.dtype), slot, axis=1),
+                st, st1))
+    return out
+
+
+def reset_slot_recurrent(cfg: ModelConfig, states: List[Any],
+                         slot: jax.Array, max_len: int) -> List[Any]:
+    """Return ``states`` with slot ``slot``'s recurrent rows restored to
+    their init values (paged pools pass through: stale blocks are
+    handled by allocation + masking).
+
+    Chunked prefill accumulates prompt state *in place* in the slot's
+    rows, so admission into a reused slot must start from the same fresh
+    state a solo prefill initialises — the retired occupant's final
+    state must not leak in.
+    """
+    out = []
+    for j, st in enumerate(states):
+        if is_paged_cache(st) or not st:
+            out.append(st)
+            continue
+        one = transformer.make_block_state(cfg, j, 1, max_len)
+        n_groups = st[next(iter(st))].shape[0]
+        fresh = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), one)
+        out.append(jax.tree_util.tree_map(
+            lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+                f, o.astype(f.dtype), slot, axis=1),
+            st, fresh))
+    return out
+
+
+def freeze_inactive_rows(states_old: List[Any], states_new: List[Any],
+                         active: jax.Array) -> List[Any]:
+    """Keep recurrent-state rows of inactive slots at their pre-step
+    values (leaves are [n_groups, B, ...]; ``active`` is [B] bool).
+
+    The slot-wise decode step runs every row — including slots whose
+    prompt is still streaming in chunk-by-chunk — and recurrent states
+    update unconditionally.  Paged pools need no masking (inactive rows
+    write to the trash block via their zeroed block table), but a
+    recurrent row mutated between prefill chunks would corrupt the
+    prompt state the chunks are accumulating.
+    """
+    out = []
+    for st_old, st_new in zip(states_old, states_new):
+        if is_paged_cache(st_old) or not st_old:
+            out.append(st_new)
+        else:
+            out.append(jax.tree_util.tree_map(
+                lambda o, n: jnp.where(
+                    active.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
+                st_old, st_new))
+    return out
+
+
+def has_kv_cache(cfg: ModelConfig) -> bool:
+    """Whether any layer in the repeating period carries a KV cache
+    (pure-recurrent stacks — xLSTM — page nothing but still benefit
+    from chunked prefill)."""
+    p_len = transformer.period(cfg)
+    return any(transformer.mixer_kind(cfg, j) == "attn"
+               for j in range(p_len))
+
+
+def has_recurrent_state(cfg: ModelConfig) -> bool:
+    """Whether any layer carries per-slot recurrent state (mamba/
+    xlstm) that chunked prefill must reset on slot reuse."""
+    p_len = transformer.period(cfg)
+    return any(transformer.mixer_kind(cfg, j) != "attn"
+               for j in range(p_len))
+
+
+def kv_cache_bytes(states: List[Any]) -> int:
+    """Total bytes held by KV storage (contiguous ``k``/``v`` windows or
+    paged ``k_pool``/``v_pool`` stores) in a decode-state tree."""
+    total = 0
+    for st in states:
+        if not isinstance(st, dict):
+            continue
+        for name in ("k", "v", "k_pool", "v_pool"):
+            leaf = st.get(name)
+            if leaf is not None:
+                total += leaf.size * leaf.dtype.itemsize
+    return total

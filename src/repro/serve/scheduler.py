@@ -32,13 +32,35 @@ kinds of work:
 The host loop is plain Python (admission order, arrival times, harvest);
 everything per-token is inside the one jitted step.
 
+Paged KV cache + chunked prefill
+--------------------------------
+With ``kv_block_size > 0`` the attention KV state is no longer a private
+``[slots, max_len]`` window per slot but one shared pool of fixed-size
+token blocks (``serve.kv_pool``), addressed through per-slot block
+tables — DARTH-PUM's array-pool allocation applied to the cache.  A
+request owns ``ceil((prompt + max_tokens - 1) / block_size)`` blocks
+for exactly its lifetime, so total KV memory follows the *live* token
+count instead of ``slots * max_len``.  Admission then also waits for
+blocks: a slot may be free while the pool is not.
+
+Prefill stops being a monolithic splice: prompts are streamed through a
+batch-1 chunked-prefill step that writes K/V straight into the shared
+pool through the slot's block table (recurrent xlstm/ssm rows are
+spliced per chunk — they are tiny).  With ``chunked_prefill=True`` the
+chunks are ``block_size`` tokens and at most one chunk per slot is fed
+per scheduler iteration, interleaved with the decode step — a long
+prompt no longer head-of-line-blocks the decode of live slots, and the
+chunk step compiles for ONE shape instead of one shape per prompt
+length.  Both paths preserve the oracle-equivalence invariant below.
+
 Oracle equivalence
 ------------------
 For *any* interleaved arrival trace, every request's tokens are
 bit-identical to running that request alone through
 ``ServeEngine.generate_loop`` — greedy and sampled, across state
-families (dense KV / xlstm / ssm) and execution modes (bf16/int8/pum).
-``tests/test_scheduler.py`` property-tests this invariant.  Two pieces
+families (dense KV / xlstm / ssm), execution modes (bf16/int8/pum), and
+KV layouts (contiguous / paged, chunked or monolithic prefill).
+``tests/test_scheduler.py`` property-tests this invariant.  Three pieces
 of the stack make it hold:
 
   * activation quantisation uses per-input-row scales
@@ -46,7 +68,12 @@ of the stack make it hold:
     depend on what it is co-batched with;
   * per-slot sampling draws each row from its own key
     (``engine.sample_token``'s vector form), reproducing the solo call's
-    key schedule exactly.
+    key schedule exactly;
+  * the paged gather is cropped back to the engine window
+    (``kv_len``), so attention reduction shapes — and the compiled
+    reduction order — match the contiguous cache exactly, and the
+    recurrent prefill branches are per-token scans whose chunk
+    boundaries cannot move numerics.
 
 MoE configs schedule fine but are excluded from the guarantee: expert
 capacity is shared across the batch, so dropping is inherently coupled.
@@ -54,9 +81,8 @@ capacity is shared across the batch, so dropping is inherently coupled.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from collections import deque
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +90,7 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import lm
+from repro.serve import kv_pool
 from repro.serve.engine import ServeEngine, make_decode_step, sample_token
 
 
@@ -99,15 +126,25 @@ class Completion:
     finished_step: int                 # scheduler step of the last token
 
 
+@dataclasses.dataclass
+class _PrefillJob:
+    """A slot mid-prefill: the prompt streams into the paged pool in
+    chunks; the slot joins decode once the last chunk lands."""
+    req: Request
+    prompt: List[int]
+    pos: int = 0                       # prompt tokens already fed
+
+
 # ---------------------------------------------------------------------------
 # The jitted slot-wise decode step
 # ---------------------------------------------------------------------------
 
-def make_slot_step(cfg: ModelConfig):
+def make_slot_step(cfg: ModelConfig, kv_len: Optional[int] = None):
     """Build the one-dispatch-per-token engine core.
 
     (params, states, cur_tok [B,1], cache_index [B], keys [B,2],
-     active [B] bool, temp [B], eos [B], gen [B], max_toks [B])
+     active [B] bool, temp [B], eos [B], gen [B], max_toks [B]
+     [, block_table [B,W]])
       -> (states', tok [B], cache_index', keys', active', gen', done [B])
 
     Every slot — live, finished, or never filled — flows through the
@@ -115,13 +152,29 @@ def make_slot_step(cfg: ModelConfig):
     the counters and termination logic.  Key schedule per slot: the
     request's chain key is folded with its local step number
     (``gen - 1``), mirroring ``generate_loop``'s ``fold_in(key, i)``.
+
+    ``block_table`` (and ``kv_len`` at build time) select the paged KV
+    path: rows address the shared block pool through their table row;
+    retired/empty rows carry all-zero tables, so their masked writes
+    land in the reserved trash block.
     """
-    decode = make_decode_step(cfg)
+    decode = make_decode_step(cfg, kv_len=kv_len)
+    paged = kv_len is not None
 
     def slot_step(params, states, cur_tok, cache_index, keys, active,
-                  temp, eos, gen, max_toks):
+                  temp, eos, gen, max_toks, block_table=None):
         step_keys = jax.vmap(jax.random.fold_in)(keys, gen - 1)
-        logits, states = decode(params, states, cur_tok, cache_index)
+        logits, new_states = decode(params, states, cur_tok, cache_index,
+                                    block_table=block_table)
+        if paged:
+            # chunked prefill streams prompts in *between* decode steps:
+            # a mid-prefill row's recurrent state must not move under it
+            # (its KV writes already go to the trash block via the
+            # zeroed block-table row)
+            states = kv_pool.freeze_inactive_rows(states, new_states,
+                                                  active)
+        else:
+            states = new_states
         tok = sample_token(logits, step_keys, temp)            # [B, 1]
         gen = gen + active.astype(gen.dtype)
         done = active & ((tok[:, 0] == eos) | (gen >= max_toks))
@@ -143,29 +196,74 @@ class ContinuousBatchingScheduler:
     prefill) and adds the slot pool + host admission loop.  ``run`` is
     re-entrant: all slots drain before it returns, so one scheduler
     serves many traces (and the jitted step/prefill stay warm).
+
+    ``kv_block_size > 0`` switches the attention KV state from
+    per-slot contiguous windows to the shared paged block pool
+    (``serve.kv_pool``); ``num_kv_blocks`` sizes the pool (default:
+    the contiguous equivalent, ``num_slots * ceil(max_len /
+    block_size)`` — pass less to actually save memory).
+    ``chunked_prefill=True`` (paged only) streams prompts in
+    ``kv_block_size``-token chunks interleaved with decode steps.
     """
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int = 4,
-                 max_len: int = 128, prepack: Optional[bool] = None):
+                 max_len: int = 128, prepack: Optional[bool] = None,
+                 kv_block_size: int = 0, num_kv_blocks: int = 0,
+                 chunked_prefill: bool = False):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if chunked_prefill and kv_block_size <= 0:
+            raise ValueError(
+                "chunked_prefill streams prompts through the paged pool; "
+                "set kv_block_size > 0 to enable it")
         self.engine = ServeEngine(cfg, params, max_len=max_len,
                                   prepack=prepack)
         self.cfg = self.engine.cfg
         self.params = self.engine.params
         self.num_slots = num_slots
         self.max_len = max_len
+        self.paged = kv_block_size > 0
+        self.chunked_prefill = chunked_prefill
         # donate the state tree: the per-row KV-cache updates then happen
         # in place instead of copying the whole cache every token (the
         # host rebinds self.states to the step's return unconditionally)
-        self._step = jax.jit(make_slot_step(self.cfg),
-                             donate_argnums=(1,))
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        if self.paged:
+            self.block_size = kv_block_size
+            self.table_width = kv_pool.table_width(max_len, kv_block_size)
+            self.num_kv_blocks = (num_kv_blocks
+                                  or num_slots * self.table_width)
+            # pure-recurrent stacks (xLSTM) have no KV to page: the pool
+            # machinery idles at zero blocks per request, but chunked
+            # prefill still applies to their per-token state scans
+            self._has_kv = kv_pool.has_kv_cache(self.cfg)
+            self._step = jax.jit(make_slot_step(self.cfg, kv_len=max_len),
+                                 donate_argnums=(1,))
+            self._chunk_prefill = self._build_chunk_prefill()
+            self._has_recurrent = kv_pool.has_recurrent_state(self.cfg)
+            cfg_, ml_ = self.cfg, max_len
+            self._reset_slot = jax.jit(
+                lambda states, slot: kv_pool.reset_slot_recurrent(
+                    cfg_, states, slot, ml_),
+                donate_argnums=(0,))
+        else:
+            self._step = jax.jit(make_slot_step(self.cfg),
+                                 donate_argnums=(1,))
+            self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._reset()
 
     def _reset(self) -> None:
         b = self.num_slots
-        self.states = lm.init_state(self.cfg, b, self.max_len)
+        if self.paged:
+            self.states = lm.init_paged_state(
+                self.cfg, b, self.max_len, num_blocks=self.num_kv_blocks,
+                block_size=self.block_size)
+            self._alloc = kv_pool.BlockAllocator(self.num_kv_blocks)
+            self._block_table = np.zeros((b, self.table_width), np.int32)
+            self._slot_blocks: List[List[int]] = [[] for _ in range(b)]
+            self._prefills: Dict[int, _PrefillJob] = {}
+        else:
+            self.states = lm.init_state(self.cfg, b, self.max_len)
+            self._prefills = {}
         # host mirrors of the per-slot lanes (tiny; re-shipped per step)
         self._cur_tok = np.zeros((b, 1), np.int32)
         self._cache_index = np.zeros((b,), np.int32)
@@ -188,7 +286,34 @@ class ContinuousBatchingScheduler:
                 f, o.astype(f.dtype), slot, axis=1),
             full_states, one_states)
 
+    def _build_chunk_prefill(self):
+        """The jitted batch-1 chunk step: run ``tokens`` of one slot's
+        prompt against the shared tree — K/V scatter through the slot's
+        block-table row into the pool, recurrent rows sliced out /
+        spliced back (they are O(B * d), not O(B * max_len * d)).
+        Compiles once per distinct chunk length: with chunked prefill
+        that is the block size plus ragged tails, not one shape per
+        prompt length."""
+        cfg, max_len = self.cfg, self.max_len
+
+        def chunk_prefill(params, states, tokens, start, table_row, slot):
+            one = kv_pool.slot_states_view(cfg, states, slot)
+            logits, one, _ = lm.forward(
+                params, tokens, cfg, states=one,
+                cache_index=jnp.reshape(start, (1,)),
+                block_table=table_row, last_only=True, kv_len=max_len)
+            states = kv_pool.slot_states_merge(cfg, states, one, slot)
+            return states, logits
+
+        return jax.jit(chunk_prefill, donate_argnums=(1,))
+
     # -- admission ---------------------------------------------------------
+
+    def _blocks_for(self, req: Request) -> int:
+        if not self._has_kv:
+            return 0
+        return kv_pool.blocks_needed(len(req.prompt), req.max_tokens,
+                                     self.block_size)
 
     def _admit(self, slot: int, req: Request, step: int,
                out: Dict[int, Completion]) -> bool:
@@ -220,6 +345,84 @@ class ContinuousBatchingScheduler:
         self._slot_toks[slot] = [tok0]
         self._slot_admitted[slot] = step
         return True
+
+    def _admit_paged(self, slot: int, req: Request, step: int) -> bool:
+        """Claim ``slot`` and the request's KV blocks; prefill happens
+        incrementally via ``_feed_prefills``.  Returns False (leaving
+        the allocator untouched) when the pool cannot fund the request
+        yet — the caller keeps it queued FIFO."""
+        need = self._blocks_for(req)
+        ids = self._alloc.alloc(need)
+        if ids is None:
+            return False
+        self._slot_blocks[slot] = ids
+        self._block_table[slot, :] = 0
+        self._block_table[slot, :len(ids)] = ids
+        if self._has_recurrent:
+            # chunked prefill accumulates prompt state in the slot's
+            # recurrent rows — scrub the retired occupant's state first
+            self.states = self._reset_slot(self.states, jnp.int32(slot))
+        prompt = list(int(t) for t in req.prompt)
+        self._prefills[slot] = _PrefillJob(req=req, prompt=prompt)
+        self._slot_req[slot] = req
+        self._slot_toks[slot] = []
+        self._slot_admitted[slot] = step
+        return True
+
+    def _retire_paged_slot(self, slot: int) -> None:
+        if self._slot_blocks[slot]:
+            self._alloc.free(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+        self._block_table[slot, :] = 0
+
+    def _feed_prefills(self, step: int, out: Dict[int, Completion]) -> int:
+        """Advance every mid-prefill slot by one chunk (``block_size``
+        tokens when chunked, the whole prompt otherwise).  A slot whose
+        final chunk lands samples its first token and either joins the
+        decode batch or completes instantly (EOS at prefill /
+        max_tokens=1) and retires.  Returns dispatches performed."""
+        dispatches = 0
+        for slot in sorted(self._prefills):
+            pf = self._prefills[slot]
+            chunk = self.block_size if self.chunked_prefill \
+                else len(pf.prompt)
+            c = min(chunk, len(pf.prompt) - pf.pos)
+            toks = jnp.asarray(pf.prompt[pf.pos:pf.pos + c],
+                               jnp.int32)[None]
+            table_row = jnp.asarray(self._block_table[slot:slot + 1])
+            self.states, logits = self._chunk_prefill(
+                self.params, self.states, toks, jnp.int32(pf.pos),
+                table_row, jnp.int32(slot))
+            pf.pos += c
+            dispatches += 1
+            if pf.pos < len(pf.prompt):
+                continue
+
+            # prompt fully resident: sample the first token, exactly as
+            # the monolithic admission path does
+            del self._prefills[slot]
+            req = pf.req
+            key = jax.random.PRNGKey(req.seed)
+            tok0 = int(sample_token(logits, key, req.temperature)[0, 0])
+            if tok0 == req.eos_id or req.max_tokens == 1:
+                reason = "eos" if tok0 == req.eos_id else "length"
+                out[req.rid] = Completion(
+                    req.rid, pf.prompt, [tok0], reason,
+                    int(self._slot_admitted[slot]), step)
+                self._slot_req[slot] = None
+                self._slot_toks[slot] = []
+                self._retire_paged_slot(slot)
+                continue
+            self._cur_tok[slot, 0] = tok0
+            self._cache_index[slot] = len(pf.prompt)
+            self._keys[slot] = np.asarray(key, np.uint32)
+            self._active[slot] = True
+            self._temp[slot] = req.temperature
+            self._eos[slot] = req.eos_id if req.eos_id >= 0 else -1
+            self._gen[slot] = 1
+            self._max_toks[slot] = req.max_tokens
+            self._slot_toks[slot] = [tok0]
+        return dispatches
 
     # -- the serve loop ----------------------------------------------------
 
@@ -255,25 +458,55 @@ class ContinuousBatchingScheduler:
                     f"request {r.rid}: max_tokens must be >= 1, "
                     f"got {r.max_tokens}")
             self.engine._check_window(len(r.prompt), r.max_tokens)
+            if self.paged:
+                need = self._blocks_for(r)
+                if need > self.num_kv_blocks:
+                    raise ValueError(
+                        f"request {r.rid}: prompt_len={len(r.prompt)} + "
+                        f"max_tokens={r.max_tokens} needs {need} KV "
+                        f"blocks, exceeding the pool capacity of "
+                        f"{self.num_kv_blocks} blocks "
+                        f"({self.num_kv_blocks * self.block_size} "
+                        f"positions); re-create the scheduler with "
+                        f"num_kv_blocks >= {need}")
         pending = deque(sorted(reqs, key=lambda r: r.arrival))
         ready: deque = deque()
         out: Dict[int, Completion] = {}
         step = 0               # simulated clock (jumps over idle gaps)
-        work_steps = 0         # decode dispatches actually performed
+        work_steps = 0         # decode/prefill dispatches performed
 
-        while pending or ready or self._active.any():
+        while pending or ready or self._prefills or self._active.any():
             if work_steps > max_steps:
                 raise RuntimeError(
                     f"scheduler exceeded max_steps={max_steps}")
             while pending and pending[0].arrival <= step:
                 ready.append(pending.popleft())
-            for slot in range(self.num_slots):
-                # retry the same slot after an instant completion (EOS at
-                # prefill / max_tokens=1 never occupy it)
-                while ready and not self._active[slot]:
-                    self._admit(slot, ready.popleft(), step, out)
+            if self.paged:
+                for slot in range(self.num_slots):
+                    if not ready:
+                        break
+                    if (self._active[slot] or slot in self._prefills
+                            or self._slot_req[slot] is not None):
+                        continue
+                    # FIFO: if the pool can't fund the head request yet,
+                    # nothing behind it jumps the queue
+                    if not self._admit_paged(slot, ready[0], step):
+                        break
+                    ready.popleft()
+                work_steps += self._feed_prefills(step, out)
+            else:
+                for slot in range(self.num_slots):
+                    # retry the same slot after an instant completion
+                    # (EOS at prefill / max_tokens=1 never occupy it)
+                    while ready and not self._active[slot]:
+                        self._admit(slot, ready.popleft(), step, out)
 
             if not self._active.any():
+                if self._prefills:
+                    # prompts are still streaming in; no decode to run
+                    # this iteration, but the clock advances
+                    step += 1
+                    continue
                 # nothing decoding (the admission pass drained `ready`):
                 # jump time to the next arrival
                 if pending:
@@ -283,11 +516,19 @@ class ContinuousBatchingScheduler:
 
             was_active = self._active.copy()
             work_steps += 1
+            step_args = (self.params, self.states, self._cur_tok,
+                         self._cache_index, self._keys, self._active,
+                         self._temp, self._eos, self._gen, self._max_toks)
+            if self.paged:
+                # rows not actively decoding (empty, retired, or still
+                # mid-prefill) get an all-zero table: their masked writes
+                # go to the trash block instead of scribbling over the
+                # blocks a streaming prefill is filling
+                decode_table = self._block_table * \
+                    self._active[:, None].astype(np.int32)
+                step_args += (jnp.asarray(decode_table),)
             (self.states, tok, cache_index, keys, active, gen,
-             done) = self._step(
-                self.params, self.states, self._cur_tok,
-                self._cache_index, self._keys, self._active, self._temp,
-                self._eos, self._gen, self._max_toks)
+             done) = self._step(*step_args)
             # writable host copies (np.asarray of a jax array is read-only)
             tok = np.array(tok)
             self._cur_tok = tok[:, None].astype(np.int32)
@@ -309,8 +550,17 @@ class ContinuousBatchingScheduler:
                         int(self._slot_admitted[slot]), step)
                     self._slot_req[slot] = None
                     self._slot_toks[slot] = []
+                    if self.paged:
+                        self._retire_paged_slot(slot)
             step += 1
         return out
+
+    # -- introspection -----------------------------------------------------
+
+    def kv_cache_bytes(self) -> int:
+        """Bytes held by KV storage in the live decode-state tree
+        (contiguous windows or the shared paged pool)."""
+        return kv_pool.kv_cache_bytes(self.states)
 
 
 # ---------------------------------------------------------------------------
