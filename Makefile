@@ -1,8 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist test-serve quickstart bench bench-smoke \
-	bench-baseline bench-check
+.PHONY: test test-dist test-serve test-tp lint quickstart bench \
+	bench-smoke bench-baseline bench-check
 
 # tier-1 verify; test_distributed.py spawns its own subprocesses with
 # XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -11,6 +11,19 @@ test:
 
 test-dist:
 	$(PY) -m pytest -q tests/test_distributed.py tests/test_dist_unit.py
+
+# tensor-parallel serving + dist specs on 8 forced host devices (the
+# multidevice CI job): the TP oracle-equivalence grid (tp in {1,2,4} x
+# families x modes x KV layouts) runs in-process here — on a bare
+# 1-device run tests/test_tp_serving.py skips wholesale
+test-tp:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m pytest -q tests/test_tp_serving.py tests/test_dist_unit.py
+
+# ruff, pinned in requirements.txt (the lint CI job); config in
+# pyproject.toml
+lint:
+	$(PY) -m ruff check .
 
 # scheduler + serving path standalone: continuous-batching oracle
 # equivalence, fused-scan decode, sampling, prepack/bitslice properties

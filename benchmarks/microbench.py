@@ -244,6 +244,93 @@ def _bench_serve_paged(cfg, params, small: bool) -> List[Row]:
                      sched.kv_cache_bytes(), "bytes"))
     rows.append(("serve_batch/mixed_paged_speedup",
                  results["paged"] / results["contiguous"], "x"))
+    rows.extend(_bench_serve_tp(small))
+    return rows
+
+
+_TP_BENCH_SCRIPT = """
+import json, time
+import jax
+import numpy as np
+from repro.config import small_test_config
+from repro.config import PUMConfig
+from repro.launch.mesh import make_tp_mesh
+from repro.models import lm
+from repro.serve import ContinuousBatchingScheduler, Request
+
+small = {small}
+gen = 8 if small else 24
+plen = 8
+cfg = small_test_config(num_kv_heads=4, pum=PUMConfig(mode="int8"))
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(13)
+
+
+def trace(n):
+    return [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        size=plen).tolist(),
+                    max_tokens=gen, seed=int(rng.integers(2**31)), rid=i)
+            for i in range(n)]
+
+
+out = {{}}
+for tp in (1, 2, 4):
+    sched = ContinuousBatchingScheduler(
+        cfg, params, num_slots=4, max_len=plen + gen + 1,
+        kv_block_size=4, chunked_prefill=True, mesh=make_tp_mesh(tp))
+    sched.run(trace(4))                      # warm: compiles step + chunks
+    reqs = trace(8)
+    t0 = time.perf_counter()
+    served = sched.run(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(len(c.tokens) for c in served.values())
+    out[tp] = toks / dt
+print("TPBENCH " + json.dumps(out))
+"""
+
+
+def _bench_serve_tp(small: bool) -> List[Row]:
+    """Tensor-parallel serving throughput, tp in {1, 2, 4}.
+
+    Runs in a subprocess with 8 forced host devices so the parent bench
+    process stays on 1 device (matching every other row's environment)
+    and the rows exist on any machine.  On CPU the collectives make
+    tp > 1 *slower* on a tiny model; the row tracks the serving path
+    staying alive and the relative cost of the inter-tile reductions,
+    not a speedup claim (that needs real accelerators).
+
+    ``BENCH_TP=0`` skips the sweep: CI's bench-regression step sets it
+    because every row it would produce sits in the wallclock IGNORE
+    list there (compare.py also skips ignored *missing* metrics), and
+    TP liveness is already gated by the dedicated ``multidevice`` job —
+    no point paying 3 subprocess compiles on a 2-core runner for zero
+    gating signal.  Local ``make bench``/``bench-baseline`` runs keep
+    the rows.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    if os.environ.get("BENCH_TP", "1") == "0":
+        return []
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _TP_BENCH_SCRIPT.format(small=small)],
+        capture_output=True, text=True, timeout=1200, env=env)
+    if proc.returncode != 0:          # pragma: no cover - env-dependent
+        raise RuntimeError(f"tp bench subprocess failed:\n{proc.stderr}")
+    payload = next(line for line in proc.stdout.splitlines()
+                   if line.startswith("TPBENCH "))
+    rates = json.loads(payload[len("TPBENCH "):])
+    rows: List[Row] = [(f"serve_batch/tp{tp}_toks_per_s", rate, "tok/s")
+                       for tp, rate in sorted(rates.items(),
+                                              key=lambda kv: int(kv[0]))]
+    rows.append(("serve_batch/tp4_vs_tp1_speedup",
+                 rates["4"] / rates["1"], "x"))
     return rows
 
 

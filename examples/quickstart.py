@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ADCConfig, NoiseConfig, PUMConfig
-from repro.core import analog, bitslice
+from repro.core import analog
 from repro.core.pum_linear import pum_linear
 from repro.kernels.bitslice_mvm import bitslice_mvm
 

@@ -9,11 +9,10 @@ degradation beyond) without the dataset.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import ADCConfig, NoiseConfig, PUMConfig
 from repro.models import resnet

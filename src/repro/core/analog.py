@@ -18,7 +18,7 @@ The *performance* path (deployment) is ``kernels/bitslice_mvm``.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -23,11 +23,9 @@ across all workloads (no per-figure tuning).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
 
-import numpy as np
 
 from repro.core import digital, isa
 

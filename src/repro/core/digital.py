@@ -21,7 +21,6 @@ Implemented operations (everything DARTH-PUM's workloads need):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

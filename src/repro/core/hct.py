@@ -17,15 +17,13 @@ per §5.1), and what the iso-area benchmarks sweep.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.config import ADCConfig, NoiseConfig, PUMConfig
+from repro.config import ADCConfig, NoiseConfig
 from repro.core import analog, bitslice, isa
 
 ARRAY_DIM = 64

@@ -22,7 +22,6 @@ Primitive µops (latencies in cycles @ 1 GHz, paper Table 2 + §4):
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import List, Literal, Tuple
 

@@ -81,6 +81,16 @@ class PackedLinear:
     def ndim(self) -> int:
         return self.wq.ndim
 
+    def with_arrays(self, planes, wq, scale) -> "PackedLinear":
+        """A PackedLinear carrying new children but this weight's quant
+        metadata.  Because the aux data is preserved, the result's
+        treedef equals this one's — which is what lets a
+        PackedLinear-of-PartitionSpecs (``dist.sharding.
+        packed_linear_specs``) zip against the real weight in
+        ``jax.device_put`` / ``tree_map``."""
+        return PackedLinear(planes, wq, scale, self.mode, self.weight_bits,
+                            self.bits_per_slice)
+
 
 def pack_weight(w: jax.Array, cfg: PUMConfig) -> PackedLinear:
     """Quantise + bit-slice a float weight ``[..., K, N]`` once.

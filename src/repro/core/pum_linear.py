@@ -24,10 +24,20 @@ phase).  The packed forward skips per-call quantisation/slicing *and* the
 dense bf16 shadow matmul, and is bit-exact to the QAT forward's value.
 ``PUMConfig.inference=True`` drops the shadow matmul + STE for raw float
 weights too (quantise-per-call, but no dense FLOPs).
+
+Tensor-parallel serving: under ``dist.sharding.use_mesh(mesh,
+tp_serving=True)`` each quantised contraction closes with
+``tp_replicate`` on its *integer accumulator* — a row-sharded (K-split)
+weight's per-shard partial MVMs meet in a psum there, mirroring PUMA's
+inter-tile reduction network, and the reduction is exact because the
+partials are integers.  Activation scales are per-input-row
+(``_quantize_act``), so splitting K never changes a row's quantisation.
+The float (bf16) path instead pins its operands replicated: f32
+contractions keep full K local, preserving the single-device reduction
+order bit-for-bit.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Union
 
 import jax
@@ -36,6 +46,7 @@ import jax.numpy as jnp
 from repro.config import PUMConfig
 from repro.core import analog, bitslice
 from repro.core.prepack import PackedLinear
+from repro.dist.sharding import tp_replicate
 
 
 # ---------------------------------------------------------------------------
@@ -77,13 +88,34 @@ def _quantize_act(x, bits: int):
     the invariant the continuous-batching scheduler's oracle-equivalence
     suite pins (a request decodes bit-identically alone or in a full
     slot pool).
+
+    The ``optimization_barrier`` pins WHAT gets quantised: XLA (notably
+    the CPU backend) computes bf16 elementwise regions in f32 and only
+    rounds to bf16 at cluster boundaries, so without the barrier the
+    abs-max could see *pre-rounding* f32 values — and any change in
+    cluster boundaries (a sharding constraint, a collective under
+    tensor-parallel serving) would shift the scale by one bf16 ulp and
+    flip quantised values.  The barrier materialises ``x`` in its own
+    dtype first, making the scale a pure function of the activation's
+    stored bits on one device or many.
+
+    Unlike the other rounding pins (which gate on ``cfg.inference``),
+    this one is deliberately UNCONDITIONAL: the QAT and packed forwards
+    must share quantiser semantics bit-for-bit — ``prepack``'s
+    packed == raw guarantee (tests/test_prepack.py) zips one against
+    the other — so gating it per-mode would let the two graphs quantise
+    different values.
     """
+    x = jax.lax.optimization_barrier(x)
     return bitslice.quantize_symmetric(x.astype(jnp.float32), bits,
                                        axis=x.ndim - 1)
 
 
 def _matmul_bf16(x, w):
-    return jnp.matmul(x, w.astype(x.dtype))
+    # TP serving: float contractions must keep full K local (reduction
+    # order = bits); gather the operand and the N-sharded product
+    x = tp_replicate(x)
+    return tp_replicate(jnp.matmul(x, w.astype(x.dtype)))
 
 
 def _matmul_int8(x, w):
@@ -94,6 +126,7 @@ def _matmul_int8(x, w):
         xq.astype(jnp.int8), wq.astype(jnp.int8),
         dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
+    acc = tp_replicate(acc)            # inter-tile psum: int32 partials
     y = acc.astype(jnp.float32) * (xs * ws)
     return y.astype(x.dtype)
 
@@ -118,6 +151,7 @@ def _matmul_pum(x, w, cfg: PUMConfig, key: Optional[jax.Array]):
     else:
         acc = bitslice.bitsliced_matmul_exact(
             xq, wq, cfg.weight_bits, cfg.bits_per_slice)
+    acc = tp_replicate(acc)            # inter-tile psum: integer partials
     y = acc.astype(jnp.float32) * (xs * ws)
     return y.astype(x.dtype)
 
@@ -130,6 +164,10 @@ def _matmul_pum(x, w, cfg: PUMConfig, key: Optional[jax.Array]):
 def _matmul_int8_packed(x, w: PackedLinear):
     xq, xs = _quantize_act(x, 8)
     acc = bitslice.int_matmul(xq, w.wq)
+    # the psum-style reduction closing a row-sharded serving MVM: the
+    # K-split shards' partial accumulators are exact integers, so the
+    # all-reduce here is bitwise-identical to the single-tile contraction
+    acc = tp_replicate(acc)
     y = acc.astype(jnp.float32) * (xs * w.scale)
     return y.astype(x.dtype)
 
@@ -155,6 +193,7 @@ def _matmul_pum_packed(x, w: PackedLinear, cfg: PUMConfig,
         # runs against the recombined int8 weight in one MXU-friendly dot
         acc = bitslice.int_matmul(xq, w.wq, x_bound=x_bound,
                                   w_bound=w_bound)
+    acc = tp_replicate(acc)            # inter-tile psum: integer partials
     y = acc.astype(jnp.float32) * (xs * w.scale)
     return y.astype(x.dtype)
 
@@ -178,6 +217,13 @@ def pum_linear(x: jax.Array, w: Union[jax.Array, PackedLinear],
         assert cfg.mode == w.mode, (cfg.mode, w.mode)
     if cfg.mode == "bf16":
         assert not packed, "bf16 mode has no packed representation"
+        if cfg.inference:
+            # serving: materialise the bf16 operand at the MVM boundary
+            # so the f32 cluster rounding points — and hence the bits —
+            # cannot depend on how the surrounding graph is partitioned
+            # (single device vs tensor-parallel); the result is pinned
+            # for every mode below
+            x = jax.lax.optimization_barrier(x)
         y = _matmul_bf16(x, w)
     elif cfg.mode == "int8":
         yq = _matmul_int8_packed(x, w) if packed else _matmul_int8(x, w)
@@ -193,4 +239,10 @@ def pum_linear(x: jax.Array, w: Union[jax.Array, PackedLinear],
     if bias is not None:
         # bias addition is a DCE (digital) op in the paper's mapping
         y = y + bias.astype(y.dtype)
+    if packed or cfg.inference:
+        # serving: pin the layer output's bf16 rounding so downstream
+        # f32 consumers (cell math, norms) see the stored bits, not a
+        # pre-rounding fusion value — the other half of the bitwise
+        # single-vs-multi-device guarantee (_quantize_act pins inputs)
+        y = jax.lax.optimization_barrier(y)
     return y

@@ -14,7 +14,7 @@ the step counter (fault-tolerance requirement).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ from __future__ import annotations
 import collections
 import os
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 
 class StragglerDetector:

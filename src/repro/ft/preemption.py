@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import signal
 import threading
-from typing import Optional
 
 
 class PreemptionHandler:

@@ -38,8 +38,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.config import (MeshConfig, ModelConfig, PUMConfig, SHAPES,
-                          ShardingConfig, ShapeConfig, TrainConfig)
+from repro.config import (ModelConfig, SHAPES, ShardingConfig, ShapeConfig, TrainConfig)
 from repro.data.synthetic import make_batch_specs
 from repro.dist import sharding as shd
 from repro.launch import roofline as rl

@@ -31,3 +31,21 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
     """Small mesh for CPU tests (requires forced host device count)."""
     return _make_mesh(shape, axes)
+
+
+def make_tp_mesh(tp: int) -> jax.sharding.Mesh:
+    """1-D tensor-parallel serving mesh over the ``model`` axis.
+
+    The serving engines (``--tp N``) tile each MVM across ``tp`` devices
+    and close row-sharded contractions with an exact integer psum
+    (``dist.sharding.serve_param_specs``).  Needs ``tp`` visible
+    devices; on CPU force them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    n = len(jax.devices())
+    if tp > n:
+        raise ValueError(
+            f"--tp {tp} needs {tp} devices but only {n} are visible; on "
+            f"CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{tp} (or more) before the process starts")
+    return _make_mesh((tp,), ("model",))

@@ -14,6 +14,12 @@ per-slot windows; prompts streamed in block-size chunks):
 ``python -m repro.launch.serve --arch glm4-9b --batch-slots 4
 --workload poisson --requests 16 --gen 16 --kv-block-size 16
 --num-kv-blocks 24 --chunked-prefill``
+
+Tensor-parallel serving (PR 5: prepacked weights + KV pool sharded over
+a 1-D ``model`` mesh; bit-identical to the single-device engine):
+``XLA_FLAGS=--xla_force_host_platform_device_count=8
+python -m repro.launch.serve --arch glm4-9b --batch-slots 4 --tp 4
+--pum-mode int8 --kv-block-size 16 --chunked-prefill``
 """
 from __future__ import annotations
 
@@ -21,10 +27,10 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.config import PUMConfig
+from repro.launch.mesh import make_tp_mesh
 from repro.models import lm
 from repro.serve import (ContinuousBatchingScheduler, ServeEngine,
                          synthetic_workload)
@@ -68,20 +74,28 @@ def main():
                     help="stream prompts through the decode loop in "
                          "block-size chunks interleaved with running "
                          "decodes (requires --kv-block-size)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard prepacked "
+                         "weights and the KV pool over a 1-D model mesh "
+                         "of this many devices (1 = single device; on "
+                         "CPU force devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
 
     cfg = configs.get_reduced(args.arch)
     if args.pum_mode != "bf16":
         cfg = cfg.replace(pum=PUMConfig(mode=args.pum_mode))
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    mesh = make_tp_mesh(args.tp) if args.tp > 1 else None
 
     if args.batch_slots > 0:
-        serve_continuous(cfg, params, args)
+        serve_continuous(cfg, params, args, mesh)
         return
     eng = ServeEngine(cfg, params,
                       max_len=args.prompt_len + args.gen + 1,
                       prepack=not args.no_prepack,
-                      use_scan=not args.loop)
+                      use_scan=not args.loop,
+                      mesh=mesh)
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
@@ -90,7 +104,7 @@ def main():
     dt = time.perf_counter() - t0
     toks = args.batch * args.gen
     prepacked = (not args.no_prepack) and args.pum_mode != "bf16"
-    print(f"arch={args.arch} mode={args.pum_mode} "
+    print(f"arch={args.arch} mode={args.pum_mode} tp={args.tp} "
           f"decode={'loop' if args.loop else 'scan'} "
           f"prepack={'on' if prepacked else 'off'} "
           f"generated {toks} tokens in {dt:.2f}s "
@@ -98,7 +112,7 @@ def main():
     print("sample:", out[0, :32].tolist())
 
 
-def serve_continuous(cfg, params, args) -> None:
+def serve_continuous(cfg, params, args, mesh=None) -> None:
     """Drive the slot-based scheduler over a synthetic arrival trace."""
     n = args.requests or 4 * args.batch_slots
     max_len = args.prompt_len + args.gen + 1
@@ -106,7 +120,7 @@ def serve_continuous(cfg, params, args) -> None:
         cfg, params, num_slots=args.batch_slots, max_len=max_len,
         prepack=not args.no_prepack, kv_block_size=args.kv_block_size,
         num_kv_blocks=args.num_kv_blocks,
-        chunked_prefill=args.chunked_prefill)
+        chunked_prefill=args.chunked_prefill, mesh=mesh)
     reqs = synthetic_workload(
         n, cfg.vocab_size, max_prompt=args.prompt_len, max_new=args.gen,
         mean_interarrival=0.0 if args.workload == "burst" else 2.0,
@@ -123,6 +137,7 @@ def serve_continuous(cfg, params, args) -> None:
           f"{', chunked' if args.chunked_prefill else ''})"
           if args.kv_block_size > 0 else "contiguous")
     print(f"arch={args.arch} mode={args.pum_mode} slots={args.batch_slots} "
+          f"tp={args.tp} "
           f"kv={kv} ({sched.kv_cache_bytes() / 1e6:.2f} MB) "
           f"workload={args.workload} served {len(out)} requests "
           f"({toks} tokens) in {dt:.2f}s ({toks / dt:.1f} tok/s incl. "

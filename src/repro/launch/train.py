@@ -11,7 +11,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
 
 from repro import configs
 from repro.config import PUMConfig, ShardingConfig, TrainConfig

@@ -7,7 +7,6 @@ projections (static weights) do.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -16,7 +15,7 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.core import ibert
-from repro.dist.sharding import shard_act
+from repro.dist.sharding import shard_act, tp_serving
 from repro.models import layers
 
 Params = Dict[str, Any]
@@ -198,12 +197,20 @@ def _paged_update_and_gather(cache: Params, k: jax.Array, v: jax.Array,
         k.astype(cache["k_pool"].dtype))
     v_pool = cache["v_pool"].at[phys, off].set(
         v.astype(cache["v_pool"].dtype))
+    # tensor-parallel serving: the pool and its gathered per-row views
+    # shard the KV-head axis, so both the scatter and the block-table
+    # gather stay device-local (each shard owns the whole pool for its
+    # heads); no-ops without an active mesh
+    k_pool = shard_act(k_pool, None, None, "model", None)
+    v_pool = shard_act(v_pool, None, None, "model", None)
     kvh, hd = k_pool.shape[2:]
     k_all = k_pool[block_table].reshape(b, w * bs, kvh, hd)
     v_all = v_pool[block_table].reshape(b, w * bs, kvh, hd)
     if kv_len is not None and kv_len < w * bs:
         k_all = k_all[:, :kv_len]
         v_all = v_all[:, :kv_len]
+    k_all = shard_act(k_all, "data", None, "model", None)
+    v_all = shard_act(v_all, "data", None, "model", None)
     return {"k_pool": k_pool, "v_pool": v_pool}, k_all, v_all, pos
 
 
@@ -288,6 +295,12 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
                     c, new.astype(c.dtype), cache_index, axis=1)
         k_cache = upd(cache["k"], k)
         v_cache = upd(cache["v"], v)
+        if tp_serving():
+            # pin the serving cache's steady-state layout (KV heads over
+            # model) so per-token updates never drift the sharding; the
+            # training/dry-run flows keep decode_state_specs' placement
+            k_cache = shard_act(k_cache, "data", None, "model", None)
+            v_cache = shard_act(v_cache, "data", None, "model", None)
         cache = {"k": k_cache, "v": v_cache}
         t = k_cache.shape[1]
         if s > 2 * CHUNK_Q:

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.dist.sharding import shard_act
+from repro.dist.sharding import shard_act, tp_replicate
 from repro.models import attention, layers, transformer
 
 Params = Dict[str, Any]
@@ -211,6 +211,10 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     b, s = tokens.shape
     h = params["embed"][tokens].astype(jnp.bfloat16 if cfg.dtype ==
                                        "bfloat16" else jnp.float32)
+    if cfg.pum.inference:
+        # serving: pin the embedding's bf16 rounding (see the block-
+        # boundary barrier in transformer.apply_block)
+        h = jax.lax.optimization_barrier(h)
     if image_embeds is not None:
         img = layers.linear(params["vision_proj"],
                             image_embeds.astype(h.dtype), cfg.pum)
@@ -298,4 +302,8 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
                         head.astype(jnp.float32))
     logits = shard_act(logits, "data", None, "model")
+    # TP serving gathers the vocab-sharded logits: sampling (argmax /
+    # categorical) then runs replicated, so tie-breaks and gumbel draws
+    # are bit-identical to the single-device oracle
+    logits = tp_replicate(logits)
     return logits, out_states, aux_total

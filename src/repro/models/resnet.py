@@ -10,8 +10,7 @@ Functional JAX: params are nested dicts; init/apply pairs.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import ModelConfig
 from repro.dist.sharding import shard_act

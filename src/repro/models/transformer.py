@@ -5,7 +5,7 @@ interleave, xLSTM's sLSTM-every-k) still scan over layers.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -162,4 +162,11 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, layer_idx: int, *,
     # residual-stream constraint mode (seq/hidden/batch) — hillclimb knob
     from repro.dist import sharding as _shd
     x = shard_act(x, *_shd.residual_spec())
+    if cfg.pum.inference:
+        # serving: pin the residual's bf16 rounding at the block
+        # boundary — XLA keeps bf16 regions in f32 between rounding
+        # points, so without this the next block's norm could consume a
+        # pre-rounding value whose availability depends on graph
+        # partitioning (single device vs tensor-parallel serving)
+        x = jax.lax.optimization_barrier(x)
     return x, state, aux

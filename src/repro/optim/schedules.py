@@ -2,7 +2,6 @@
 minicpm-2b training feature, arXiv:2404.06395)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.config import TrainConfig

@@ -10,17 +10,28 @@ oracle.
 At construction the engine prepacks quantised weights
 (``repro.core.prepack``) so int8/pum serving pays quantisation + slicing
 once, at load — the crossbar-programming phase — instead of per MVM.
+
+Tensor parallelism: pass ``mesh`` (a 1-D ``model`` mesh from
+``launch.mesh.make_tp_mesh``) and the engine places the prepacked
+params with ``dist.sharding.serve_param_specs`` — int8 differential
+planes and recombined weights tiled across devices, PUMA-style — and
+traces prefill/decode inside ``use_mesh(mesh, tp_serving=True)`` so
+every row-sharded ``pum_linear`` closes with an exact integer psum.
+Completions are bit-identical to the single-device engine (the
+oracle-equivalence suite pins this for tp in {1, 2, 4}).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.dist import sharding as shd
 from repro.models import lm
 
 
@@ -85,23 +96,48 @@ class ServeEngine:
     prepack — pack linear weights at load (int8/pum modes; default on).
     use_scan — decode via the fused ``lax.scan`` (default) or the Python
     token loop (the oracle, also reachable via ``generate_loop``).
+    mesh — a 1-D ``model`` mesh for tensor-parallel serving (params are
+    placed with ``serve_param_specs`` and every step traces mesh-aware;
+    ``None`` = single device, unchanged).
     """
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 128,
-                 prepack: Optional[bool] = None, use_scan: bool = True):
+                 prepack: Optional[bool] = None, use_scan: bool = True,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         if prepack is None:
             prepack = cfg.pum.mode in ("int8", "pum")
         if prepack and cfg.pum.mode in ("int8", "pum"):
             params = lm.prepack_for_serving(params, cfg)
-            cfg = cfg.replace(
-                pum=dataclasses.replace(cfg.pum, inference=True))
+        # serving always runs in inference mode: forward values are
+        # identical (it only drops the QAT shadow matmul + STE, whose
+        # forward is the quantised value anyway), and it pins bf16
+        # rounding at every MVM/block boundary (optimization_barrier) —
+        # the bit-exactness anchor the tensor-parallel engines and
+        # their single-device oracle share, for prepacked AND
+        # per-call-quantised (--no-prepack) weights alike
+        cfg = cfg.replace(pum=dataclasses.replace(cfg.pum, inference=True))
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            shd.validate_tp(cfg, int(mesh.shape.get("model", 1)))
+            with self.mesh_ctx():
+                specs = shd.serve_param_specs(params)
+                params = jax.device_put(
+                    params, shd.named_shardings(mesh, specs))
         self.params = params
         self.max_len = max_len
         self.use_scan = use_scan
         self._decode = jax.jit(make_decode_step(cfg))
         self._prefill = jax.jit(self._prefill_impl)
         self._scan_gen = self._build_scan_generate()
+
+    def mesh_ctx(self):
+        """The trace/dispatch context: every jitted serving step is
+        traced inside it, so ``shard_act``/``tp_replicate`` constraints
+        bind to the engine's mesh (a no-op context without one)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return shd.use_mesh(self.mesh, tp_serving=True)
 
     def _prefill_impl(self, params, tokens: jax.Array,
                       encoder_frames: Optional[jax.Array],
@@ -131,7 +167,8 @@ class ServeEngine:
     def prefill(self, tokens: jax.Array,
                 encoder_frames: Optional[jax.Array] = None,
                 ) -> Tuple[Any, jax.Array, Optional[jax.Array]]:
-        return self._prefill(self.params, tokens, encoder_frames)
+        with self.mesh_ctx():
+            return self._prefill(self.params, tokens, encoder_frames)
 
     # -- fused decode: the whole token loop is one jitted scan ------------
 
@@ -180,9 +217,10 @@ class ServeEngine:
         key = jax.random.PRNGKey(seed)
         index = jnp.int32(s)
         tok0 = sample_token(logits, key, temperature)
-        toks, _ = self._scan_gen(self.params, states, tok0, key, index,
-                                 encoder_out, steps=steps,
-                                 temperature=temperature)
+        with self.mesh_ctx():
+            toks, _ = self._scan_gen(self.params, states, tok0, key, index,
+                                     encoder_out, steps=steps,
+                                     temperature=temperature)
         rest = jnp.moveaxis(toks[..., 0], 0, 1)        # [B, steps-1]
         return jnp.concatenate([prompt, tok0, rest], axis=1)
 
@@ -205,8 +243,10 @@ class ServeEngine:
             if i == steps - 1:
                 break
             key = jax.random.fold_in(key, i)
-            logits, states = self._decode(self.params, states, tok, index,
-                                          encoder_out=encoder_out)
+            with self.mesh_ctx():
+                logits, states = self._decode(self.params, states, tok,
+                                              index,
+                                              encoder_out=encoder_out)
             index = index + 1
             tok = sample_token(logits, key, temperature)
         return jnp.concatenate(out, axis=1)

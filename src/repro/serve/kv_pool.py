@@ -223,6 +223,20 @@ def has_recurrent_state(cfg: ModelConfig) -> bool:
                for j in range(p_len))
 
 
+def place_serve_states(states: List[Any], mesh) -> List[Any]:
+    """Place a freshly-initialised decode-state tree on a TP serving
+    mesh: KV pools/caches shard their KV-head axis over ``model``
+    (``dist.sharding.serve_state_specs``), recurrent rows replicate.
+
+    Called once per scheduler reset; from then on the jitted steps'
+    donated in-place updates keep the layout (attention pins it with
+    ``shard_act`` each step, so per-token writes never drift it).
+    """
+    from repro.dist import sharding as shd
+    specs = shd.serve_state_specs(states, mesh)
+    return jax.device_put(states, shd.named_shardings(mesh, specs))
+
+
 def kv_cache_bytes(states: List[Any]) -> int:
     """Total bytes held by KV storage (contiguous ``k``/``v`` windows or
     paged ``k_pool``/``v_pool`` stores) in a decode-state tree."""

@@ -204,12 +204,19 @@ class ContinuousBatchingScheduler:
     block_size)`` — pass less to actually save memory).
     ``chunked_prefill=True`` (paged only) streams prompts in
     ``kv_block_size``-token chunks interleaved with decode steps.
+
+    ``mesh`` (a 1-D ``model`` mesh) turns on tensor-parallel serving:
+    prepacked weights and the KV pool shard across devices
+    (``dist.sharding.serve_param_specs`` / ``serve_state_specs``) and
+    every jitted step runs mesh-aware; completions stay bit-identical
+    to the single-device oracle.
     """
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int = 4,
                  max_len: int = 128, prepack: Optional[bool] = None,
                  kv_block_size: int = 0, num_kv_blocks: int = 0,
-                 chunked_prefill: bool = False):
+                 chunked_prefill: bool = False,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if chunked_prefill and kv_block_size <= 0:
@@ -217,7 +224,8 @@ class ContinuousBatchingScheduler:
                 "chunked_prefill streams prompts through the paged pool; "
                 "set kv_block_size > 0 to enable it")
         self.engine = ServeEngine(cfg, params, max_len=max_len,
-                                  prepack=prepack)
+                                  prepack=prepack, mesh=mesh)
+        self.mesh = mesh
         self.cfg = self.engine.cfg
         self.params = self.engine.params
         self.num_slots = num_slots
@@ -264,6 +272,8 @@ class ContinuousBatchingScheduler:
         else:
             self.states = lm.init_state(self.cfg, b, self.max_len)
             self._prefills = {}
+        if self.mesh is not None:
+            self.states = kv_pool.place_serve_states(self.states, self.mesh)
         # host mirrors of the per-slot lanes (tiny; re-shipped per step)
         self._cur_tok = np.zeros((b, 1), np.int32)
         self._cache_index = np.zeros((b,), np.int32)
@@ -332,7 +342,9 @@ class ContinuousBatchingScheduler:
                                       step, step)
             return False
 
-        self.states = self._insert(self.states, states1, jnp.int32(slot))
+        with self.engine.mesh_ctx():
+            self.states = self._insert(self.states, states1,
+                                       jnp.int32(slot))
         self._cur_tok[slot, 0] = tok0
         self._cache_index[slot] = s
         self._keys[slot] = np.asarray(key, np.uint32)
@@ -361,7 +373,9 @@ class ContinuousBatchingScheduler:
         if self._has_recurrent:
             # chunked prefill accumulates prompt state in the slot's
             # recurrent rows — scrub the retired occupant's state first
-            self.states = self._reset_slot(self.states, jnp.int32(slot))
+            with self.engine.mesh_ctx():
+                self.states = self._reset_slot(self.states,
+                                               jnp.int32(slot))
         prompt = list(int(t) for t in req.prompt)
         self._prefills[slot] = _PrefillJob(req=req, prompt=prompt)
         self._slot_req[slot] = req
@@ -390,9 +404,10 @@ class ContinuousBatchingScheduler:
             toks = jnp.asarray(pf.prompt[pf.pos:pf.pos + c],
                                jnp.int32)[None]
             table_row = jnp.asarray(self._block_table[slot:slot + 1])
-            self.states, logits = self._chunk_prefill(
-                self.params, self.states, toks, jnp.int32(pf.pos),
-                table_row, jnp.int32(slot))
+            with self.engine.mesh_ctx():
+                self.states, logits = self._chunk_prefill(
+                    self.params, self.states, toks, jnp.int32(pf.pos),
+                    table_row, jnp.int32(slot))
             pf.pos += c
             dispatches += 1
             if pf.pos < len(pf.prompt):
@@ -527,8 +542,9 @@ class ContinuousBatchingScheduler:
                 decode_table = self._block_table * \
                     self._active[:, None].astype(np.int32)
                 step_args += (jnp.asarray(decode_table),)
-            (self.states, tok, cache_index, keys, active, gen,
-             done) = self._step(*step_args)
+            with self.engine.mesh_ctx():
+                (self.states, tok, cache_index, keys, active, gen,
+                 done) = self._step(*step_args)
             # writable host copies (np.asarray of a jax array is read-only)
             tok = np.array(tok)
             self._cur_tok = tok[:, None].astype(np.int32)

@@ -7,8 +7,7 @@ error feedback (residual carried in opt_state["ef"]).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

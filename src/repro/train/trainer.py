@@ -6,13 +6,11 @@ restore) is the multi-host one — see ckpt/ and ft/ for the pieces.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
-import numpy as np
 
-from repro.config import (MeshConfig, ModelConfig, ShardingConfig,
-                          TrainConfig)
+from repro.config import ModelConfig, ShardingConfig, TrainConfig
 from repro.ckpt import CheckpointManager
 from repro.data.synthetic import SyntheticTokens
 from repro.ft import PreemptionHandler, StragglerDetector

@@ -1,6 +1,5 @@
 """AES on DARTH-PUM: FIPS-197 known-answer tests + properties across all
 three execution paths (numpy oracle, JAX bulk, gate-accurate DCE)."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st

@@ -3,7 +3,6 @@ scheme behaviour under the IR-drop proxy (paper §4.3)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.config import ADCConfig, NoiseConfig

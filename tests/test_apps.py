@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.config import ADCConfig, NoiseConfig, PUMConfig
+from repro.config import PUMConfig
 from repro.apps import encoder_app, resnet_app
 from repro.models import resnet
 

@@ -3,7 +3,6 @@
 The FULL configs are exercised only via the dry-run (no allocation)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import configs

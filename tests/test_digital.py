@@ -1,7 +1,6 @@
 """Gate-accurate DCE tests: NOR-completeness + cost-formula validation."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import digital

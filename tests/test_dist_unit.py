@@ -115,3 +115,138 @@ def test_decode_state_specs_non_divisible_heads_stay_replicated():
     st = lm.init_state(cfg, 4, 32, abstract=True)
     specs = shd.decode_state_specs(st, mesh)
     assert specs[0]["k"] == P(None, "data", None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel serving specs (PackedLinear + KV pool) — pure spec
+# tests; the structural ones need no mesh at all, the guard tests need a
+# real 2-wide mesh (they run in the multidevice CI leg / make test-tp)
+# ---------------------------------------------------------------------------
+
+_needs2 = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs a 2-device mesh (XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+
+def _packed_params(mode="pum"):
+    from repro.config import PUMConfig, small_test_config
+    cfg = small_test_config(num_kv_heads=4, pum=PUMConfig(mode=mode))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, lm.prepack_for_serving(params, cfg)
+
+
+def test_serve_param_specs_packed_column_and_row():
+    """Column-parallel packs shard N (planes slice axis replicated,
+    scales replicated); row-parallel names (wo/wd/out_proj) shard K."""
+    from repro.core.prepack import PackedLinear
+    _, packed = _packed_params("pum")
+    specs = shd.serve_param_specs(packed)
+    wg = specs["blocks"][0]["mlp"]["wg"]["w"]       # column-parallel
+    assert isinstance(wg, PackedLinear)
+    assert wg.wq == P(None, None, "model"), wg.wq   # [G, K, N]
+    assert wg.planes == P(None, None, None, "model"), wg.planes
+    assert wg.scale == P(None, None, None), wg.scale
+    wd = specs["blocks"][0]["mlp"]["wd"]["w"]       # row-parallel
+    assert wd.wq == P(None, "model", None), wd.wq
+    assert wd.planes == P(None, None, "model", None), wd.planes
+    assert wd.scale == P(None, None, None), wd.scale
+    wo = specs["blocks"][0]["attn"]["wo"]["w"]
+    assert wo.wq == P(None, "model", None), wo.wq
+    # lm_head shards vocab; embedding and norms stay replicated
+    assert specs["lm_head"] == P(None, "model")
+    assert specs["embed"] == P(None, None)
+    assert specs["final_norm"]["scale"] == P(None)
+
+
+def test_serve_param_specs_int8_single_plane():
+    """int8 packs have no planes (None stays None) and per-out-channel
+    scales stay replicated."""
+    _, packed = _packed_params("int8")
+    specs = shd.serve_param_specs(packed)
+    wg = specs["blocks"][0]["mlp"]["wg"]["w"]
+    assert wg.planes is None
+    assert wg.wq == P(None, None, "model")
+    assert wg.scale == P(None, None, None)
+
+
+def test_serve_param_specs_raw_float_never_shards_k():
+    """bf16 serving (raw float weights): column-parallel only — no K
+    axis ever carries ``model``, the float-contraction bitwise rule."""
+    from repro.config import small_test_config
+    cfg = small_test_config(num_kv_heads=4)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    specs = shd.serve_param_specs(params)
+    for p in (specs["blocks"][0]["mlp"]["wd"]["w"],
+              specs["blocks"][0]["attn"]["wo"]["w"]):
+        assert p == P(None, None, "model"), p        # N-sharded, K free
+
+
+@_needs2
+def test_serve_param_specs_divide_evenly_under_mesh_guard():
+    """With an active mesh, every sharded spec dimension divides the
+    axis size; an indivisible one is dropped, never an error."""
+    from repro.core.prepack import PackedLinear
+    _, packed = _packed_params("pum")
+    mesh = make_test_mesh((2,), ("model",))
+    with shd.use_mesh(mesh):
+        specs = shd.serve_param_specs(packed)
+
+    def leaves(tree):
+        return jax.tree_util.tree_leaves(
+            tree, is_leaf=lambda v: isinstance(v, (P, PackedLinear)))
+
+    for leaf, spec in zip(leaves(packed), leaves(specs)):
+        arrs = [leaf] if not isinstance(leaf, PackedLinear) else \
+            [a for a in (leaf.planes, leaf.wq, leaf.scale) if a is not None]
+        sps = [spec] if not isinstance(spec, PackedLinear) else \
+            [s for s in (spec.planes, spec.wq, spec.scale) if s is not None]
+        for a, s in zip(arrs, sps):
+            for dim, ax in zip(a.shape, tuple(s)):
+                if ax is not None:
+                    assert dim % mesh.shape[ax] == 0, (a.shape, s)
+
+
+@_needs2
+def test_serve_state_specs_pool_and_cache_head_axis():
+    from repro.config import small_test_config
+    mesh = make_test_mesh((2,), ("model",))
+    cfg = small_test_config(num_kv_heads=4)
+    paged = lm.init_paged_state(cfg, 2, 32, num_blocks=6, block_size=4)
+    specs = shd.serve_state_specs(paged, mesh)
+    assert specs[0]["k_pool"] == P(None, None, None, "model", None)
+    assert specs[0]["v_pool"] == P(None, None, None, "model", None)
+    contig = lm.init_state(cfg, 2, 32)
+    specs = shd.serve_state_specs(contig, mesh)
+    assert specs[0]["k"] == P(None, None, None, "model", None)
+    # recurrent rows replicate (no data axis on the 1-D serving mesh)
+    cfg_x = small_test_config(num_kv_heads=4, xlstm_slstm_every=2)
+    st = lm.init_state(cfg_x, 2, 32)
+    specs = shd.serve_state_specs(st, mesh)
+    # mlstm c is [G, B, heads, hd, hd]: fully replicated
+    assert specs[1]["c"] == P(*([None] * st[1]["c"].ndim))
+
+
+@_needs2
+def test_serve_state_specs_indivisible_heads_drop():
+    mesh = make_test_mesh((2,), ("model",))
+    from repro.config import small_test_config
+    cfg = small_test_config(num_kv_heads=3)   # 3 % 2 != 0
+    paged = lm.init_paged_state(cfg, 2, 32, num_blocks=6, block_size=4)
+    specs = shd.serve_state_specs(paged, mesh)
+    assert specs[0]["k_pool"] == P(None, None, None, None, None)
+
+
+def test_validate_tp_raises_on_indivisible():
+    from repro.config import small_test_config
+    cfg = small_test_config(num_kv_heads=2)
+    with pytest.raises(ValueError, match="num_kv_heads"):
+        shd.validate_tp(cfg, 4)
+    with pytest.raises(ValueError, match="d_ff"):
+        shd.validate_tp(small_test_config(num_kv_heads=4, d_ff=130), 4)
+    # tp=1 and a clean divide pass silently; pure-recurrent stacks have
+    # no KV-head constraint
+    shd.validate_tp(cfg, 1)
+    shd.validate_tp(small_test_config(num_kv_heads=4), 4)
+    shd.validate_tp(small_test_config(num_kv_heads=2,
+                                      xlstm_slstm_every=2), 4)

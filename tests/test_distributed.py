@@ -9,7 +9,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 _ENV = dict(os.environ,
             XLA_FLAGS="--xla_force_host_platform_device_count=8",
@@ -142,6 +141,41 @@ def test_elastic_checkpoint_reshard(tmp_path):
         np.testing.assert_array_equal(np.asarray(restored['w']),
                                       np.asarray(tree['w']))
         assert restored['w'].sharding == sh_b['w']
+        print('OK')
+    """)
+    assert "OK" in out
+
+
+def test_tp_serving_bit_identical_smoke():
+    """One cell of the tensor-parallel oracle-equivalence grid as a
+    subprocess test, so tier-1 (1 visible device) still exercises real
+    multi-device TP serving; the full grid lives in
+    tests/test_tp_serving.py (make test-tp / the multidevice CI job)."""
+    out = _run("""
+        import jax
+        from repro.config import PUMConfig, small_test_config
+        from repro.launch.mesh import make_tp_mesh
+        from repro.models import lm
+        from repro.serve import (ContinuousBatchingScheduler, Request,
+                                 ServeEngine, oracle_completion)
+
+        cfg = small_test_config(num_kv_heads=4, pum=PUMConfig(mode='int8'))
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        reqs = [Request([1, 2, 3], max_tokens=5, seed=1),
+                Request([4] * 7, max_tokens=4, temperature=0.8, seed=2,
+                        arrival=1)]
+        oracle = ServeEngine(cfg, params, max_len=24)
+        want = {i: oracle_completion(oracle, r)
+                for i, r in enumerate(reqs)}
+        sched = ContinuousBatchingScheduler(
+            cfg, params, num_slots=2, max_len=24, kv_block_size=4,
+            chunked_prefill=True, mesh=make_tp_mesh(2))
+        out = sched.run(reqs)
+        for i in range(len(reqs)):
+            assert out[i].tokens == want[i], (i, out[i].tokens, want[i])
+        # weights really live on 2 devices
+        wq = sched.params['blocks'][0]['mlp']['wg']['w'].wq
+        assert len(wq.sharding.device_set) == 2
         print('OK')
     """)
     assert "OK" in out

@@ -56,7 +56,6 @@ def test_allocation_exhaustion():
 
 
 def test_update_row_and_mvm_cycles():
-    import jax.numpy as jnp
     dev = DarthPUMDevice(n_hcts=8)
     w = np.eye(32, dtype=np.float32)
     h = dev.setMatrix(w, element_size=8, precision=1)

@@ -7,8 +7,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bitslice
-from repro.kernels.bitslice_mvm import (bitslice_mvm, bitslice_mvm_ref,
-                                        bitslice_mvm_from_weights_ref)
+from repro.kernels.bitslice_mvm import bitslice_mvm, bitslice_mvm_ref
 from repro.kernels.bitslice_mvm.kernel import bitslice_mvm_pallas
 from repro.kernels.gf2_mvm import gf2_mvm, gf2_mvm_ref
 from repro.kernels.gf2_mvm.kernel import gf2_mvm_pallas

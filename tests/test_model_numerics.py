@@ -4,11 +4,9 @@ associative scan, mLSTM parallel vs recurrent form."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis import strategies as st
 
-from repro import configs
-from repro.config import MoEConfig, ModelConfig, PUMConfig
+from repro.config import MoEConfig, ModelConfig
 from repro.models import attention, moe, ssm, xlstm
 
 

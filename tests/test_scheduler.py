@@ -9,8 +9,6 @@ across state families (dense KV, xlstm) and execution modes
 (bf16 / int8 / pum).
 """
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

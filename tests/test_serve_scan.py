@@ -1,10 +1,8 @@
 """Fused-scan decode: token-identical to the per-token loop oracle across
 model families (decoder-only + stateful), sampling modes, and the
 prepacked quantised serving path."""
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,12 +1,9 @@
 """Training substrate: optimizer, schedules, loss descent, accumulation,
 gradient compression, checkpoint/resume, preemption, stragglers."""
-import os
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.config import ShardingConfig, TrainConfig
