@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-dist test-serve test-tp lint quickstart bench \
-	bench-smoke bench-baseline bench-check
+	bench-smoke bench-baseline bench-check audit
 
 # tier-1 verify; test_distributed.py spawns its own subprocesses with
 # XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -24,6 +24,16 @@ test-tp:
 # pyproject.toml
 lint:
 	$(PY) -m ruff check .
+
+# static invariant audit of the serving hot path: trace the full
+# family x mode x layout x tp grid, run the rule catalog
+# (src/repro/analysis/), and prove each rule fires via the mutation
+# self-tests.  Forced 8 host devices so the tp=4 graphs trace anywhere;
+# writes the structured report to AUDIT.json (gitignored, uploaded as a
+# CI artifact by the `audit` job)
+audit:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m repro.analysis.audit --self-test --json AUDIT.json
 
 # scheduler + serving path standalone: continuous-batching oracle
 # equivalence, fused-scan decode, sampling, prepack/bitslice properties

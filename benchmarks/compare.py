@@ -7,8 +7,11 @@ baseline and fail on regressions beyond a per-metric tolerance.
 Direction-aware: for timing-ish units (``us_per_call``, ``bytes``, …)
 higher is worse; for rate-ish units (``tok/s``, ``MB/s``, speedup
 ``x``) lower is worse.  A metric present in the baseline but missing
-from the fresh run is a regression too (silent coverage loss).  New
-metrics are reported informationally.
+from the fresh run is a regression too (silent coverage loss) and gets
+an auditor-style structured diff block (same ``[rule] subject: detail``
+shape as ``repro.analysis`` violations) so CI logs show exactly what
+coverage disappeared, not just a ❌ cell in a wide table.  New metrics
+are reported informationally.
 
 Prints a markdown diff table (pipe into ``$GITHUB_STEP_SUMMARY`` in CI)
 and exits 1 iff any regression exceeded tolerance.  CI timing on shared
@@ -22,14 +25,13 @@ import argparse
 import fnmatch
 import json
 import sys
-from typing import Dict, Tuple
 
 # units where a larger value is a slowdown/cost; anything else is a rate
 LOWER_IS_BETTER_UNITS = {"us_per_call", "us", "ms", "s", "bytes", "cycles",
                          "pJ", "nJ", "mm2"}
 
 
-def load(path: str) -> Dict[str, Tuple[float, str]]:
+def load(path: str) -> dict[str, tuple[float, str]]:
     with open(path) as f:
         payload = json.load(f)
     return {name: (float(rec["value"]), str(rec.get("unit", "")))
@@ -42,9 +44,9 @@ def pct_change(base: float, fresh: float) -> float:
     return (fresh - base) / abs(base) * 100.0
 
 
-def compare(baseline: Dict[str, Tuple[float, str]],
-            fresh: Dict[str, Tuple[float, str]],
-            tolerance: float, ignore: list) -> Tuple[list, bool]:
+def compare(baseline: dict[str, tuple[float, str]],
+            fresh: dict[str, tuple[float, str]],
+            tolerance: float, ignore: list) -> tuple[list, bool]:
     """Returns (markdown table rows, any_regression)."""
     rows = []
     bad = False
@@ -85,6 +87,35 @@ def compare(baseline: Dict[str, Tuple[float, str]],
     return rows, bad
 
 
+def missing_metrics(baseline: dict[str, tuple[float, str]],
+                    fresh: dict[str, tuple[float, str]],
+                    ignore: list) -> list:
+    """Baseline metrics absent from the fresh run (ignore-globs applied),
+    as (name, value, unit) sorted by name."""
+    out = []
+    for name in sorted(set(baseline) - set(fresh)):
+        if any(fnmatch.fnmatch(name, pat) for pat in ignore):
+            continue
+        v, unit = baseline[name]
+        out.append((name, v, unit))
+    return out
+
+
+def render_missing_report(missing: list, fresh_path: str) -> str:
+    """Auditor-style structured diff for coverage loss: one
+    ``[missing-metric]`` line per dropped metric, preceded by a count —
+    the same shape ``repro.analysis.report`` renders rule violations in,
+    so CI log scrapers handle both identically."""
+    lines = [f"{len(missing)} missing metric(s) — baseline coverage "
+             f"absent from {fresh_path}:"]
+    for name, v, unit in missing:
+        lines.append(
+            f"  [missing-metric] {name}: baseline recorded "
+            f"{v:.4g}{' ' + unit if unit else ''} but the fresh run "
+            f"produced no value — bench coverage silently lost")
+    return "\n".join(lines)
+
+
 def render_markdown(rows: list, tolerance: float) -> str:
     out = [f"### Bench diff (tolerance {tolerance:g}%)", "",
            "| metric | baseline | fresh | Δ | status |",
@@ -111,6 +142,10 @@ def main() -> int:
     fresh = load(args.fresh)
     rows, bad = compare(baseline, fresh, args.tolerance, args.ignore)
     print(render_markdown(rows, args.tolerance))
+    missing = missing_metrics(baseline, fresh, args.ignore)
+    if missing:
+        print("\n" + render_missing_report(missing, args.fresh),
+              file=sys.stderr)
     if bad:
         print(f"\nFAIL: regression(s) beyond {args.tolerance:g}% vs "
               f"{args.baseline}", file=sys.stderr)

@@ -7,13 +7,13 @@ iterations — exercising the same code paths in seconds.
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-Row = Tuple[str, float, str]
+Row = tuple[str, float, str]
 
 
 def _time(fn: Callable[[], object], iters: int = 5, warmup: int = 2) -> float:
@@ -30,11 +30,11 @@ def _time(fn: Callable[[], object], iters: int = 5, warmup: int = 2) -> float:
     return best * 1e6
 
 
-def bench_aes_bulk(small: bool = False) -> List[Row]:
+def bench_aes_bulk(small: bool = False) -> list[Row]:
     from repro.apps import aes_app
     rng = np.random.default_rng(0)
     key = rng.integers(0, 256, size=(16,), dtype=np.uint8)
-    rows: List[Row] = []
+    rows: list[Row] = []
     for n in (64,) if small else (1024, 16384):
         pts = jnp.asarray(rng.integers(0, 256, size=(n, 16), dtype=np.uint8))
         us = _time(lambda: aes_app.aes_encrypt(pts, key))
@@ -43,10 +43,10 @@ def bench_aes_bulk(small: bool = False) -> List[Row]:
     return rows
 
 
-def bench_bitslice_mvm(small: bool = False) -> List[Row]:
+def bench_bitslice_mvm(small: bool = False) -> list[Row]:
     from repro.kernels.bitslice_mvm import bitslice_mvm
     rng = np.random.default_rng(1)
-    rows: List[Row] = []
+    rows: list[Row] = []
     shapes = [(8, 128, 128)] if small else [(128, 512, 512),
                                             (512, 1024, 1024)]
     for (m, k, n) in shapes:
@@ -58,10 +58,10 @@ def bench_bitslice_mvm(small: bool = False) -> List[Row]:
     return rows
 
 
-def bench_gf2_mvm(small: bool = False) -> List[Row]:
+def bench_gf2_mvm(small: bool = False) -> list[Row]:
     from repro.kernels.gf2_mvm import gf2_mvm
     rng = np.random.default_rng(2)
-    rows: List[Row] = []
+    rows: list[Row] = []
     for m in (128,) if small else (1024, 8192):
         x = jnp.asarray(rng.integers(0, 2, size=(m, 128)), jnp.int8)
         a = jnp.asarray(rng.integers(0, 2, size=(128, 128)), jnp.int8)
@@ -70,12 +70,12 @@ def bench_gf2_mvm(small: bool = False) -> List[Row]:
     return rows
 
 
-def bench_ibert(small: bool = False) -> List[Row]:
+def bench_ibert(small: bool = False) -> list[Row]:
     from repro.core import ibert
     rng = np.random.default_rng(3)
     d = 128 if small else 1024
     x = jnp.asarray(rng.normal(size=(64, d)), jnp.float32)
-    rows: List[Row] = []
+    rows: list[Row] = []
     sm = jax.jit(lambda t: ibert.softmax_quantized(t, 8))
     gl = jax.jit(lambda t: ibert.gelu_quantized(t, 8))
     ln = jax.jit(lambda t: ibert.layernorm_quantized(t, 8))
@@ -87,7 +87,7 @@ def bench_ibert(small: bool = False) -> List[Row]:
     return rows
 
 
-def bench_pum_linear(small: bool = False) -> List[Row]:
+def bench_pum_linear(small: bool = False) -> list[Row]:
     """Serving path (prepacked weights, ``inference=True``) for the
     quantised modes — the hot path this harness tracks — plus the QAT
     (per-call quant + STE shadow matmul) rows for reference."""
@@ -101,7 +101,7 @@ def bench_pum_linear(small: bool = False) -> List[Row]:
     shape = f"{m}x{k}x{n}"
     x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
-    rows: List[Row] = []
+    rows: list[Row] = []
     f = jax.jit(lambda a, b: pum_linear(a, b, PUMConfig(mode="bf16")))
     rows.append((f"pum_linear/bf16_{shape}", _time(lambda: f(x, w)),
                  "us_per_call"))
@@ -118,7 +118,7 @@ def bench_pum_linear(small: bool = False) -> List[Row]:
     return rows
 
 
-def bench_serve_decode(small: bool = False) -> List[Row]:
+def bench_serve_decode(small: bool = False) -> list[Row]:
     """Fused-scan decode vs the per-token loop oracle (tiny model; the
     delta is per-token dispatch + redundant per-call weight work)."""
     from repro.config import small_test_config
@@ -141,7 +141,7 @@ def bench_serve_decode(small: bool = False) -> List[Row]:
              "x")]
 
 
-def bench_serve_batch(small: bool = False) -> List[Row]:
+def bench_serve_batch(small: bool = False) -> list[Row]:
     """Continuous-batching throughput vs slot count.
 
     A saturating burst (2x slots requests, identical shapes) decoded by
@@ -164,7 +164,7 @@ def bench_serve_batch(small: bool = False) -> List[Row]:
                         max_tokens=gen, seed=int(rng.integers(2**31)),
                         rid=i) for i in range(n)]
 
-    rows: List[Row] = []
+    rows: list[Row] = []
     for slots in (1, 2) if small else (1, 2, 4, 8):
         sched = ContinuousBatchingScheduler(cfg, params, num_slots=slots,
                                             max_len=plen + gen + 1)
@@ -180,7 +180,7 @@ def bench_serve_batch(small: bool = False) -> List[Row]:
     return rows
 
 
-def _bench_serve_paged(cfg, params, small: bool) -> List[Row]:
+def _bench_serve_paged(cfg, params, small: bool) -> list[Row]:
     """Mixed short/long-prompt workload: paged KV + chunked prefill vs
     the contiguous per-slot cache.
 
@@ -214,7 +214,7 @@ def _bench_serve_paged(cfg, params, small: bool) -> List[Row]:
     lens = short + [long_plen] + short
     width = -(-max_len // block)
     kwargs = dict(num_slots=slots, max_len=max_len)
-    rows: List[Row] = []
+    rows: list[Row] = []
     results = {}
     for name, extra in (
             ("contiguous", {}),
@@ -289,7 +289,7 @@ print("TPBENCH " + json.dumps(out))
 """
 
 
-def _bench_serve_tp(small: bool) -> List[Row]:
+def _bench_serve_tp(small: bool) -> list[Row]:
     """Tensor-parallel serving throughput, tp in {1, 2, 4}.
 
     Runs in a subprocess with 8 forced host devices so the parent bench
@@ -326,7 +326,7 @@ def _bench_serve_tp(small: bool) -> List[Row]:
     payload = next(line for line in proc.stdout.splitlines()
                    if line.startswith("TPBENCH "))
     rates = json.loads(payload[len("TPBENCH "):])
-    rows: List[Row] = [(f"serve_batch/tp{tp}_toks_per_s", rate, "tok/s")
+    rows: list[Row] = [(f"serve_batch/tp{tp}_toks_per_s", rate, "tok/s")
                        for tp, rate in sorted(rates.items(),
                                               key=lambda kv: int(kv[0]))]
     rows.append(("serve_batch/tp4_vs_tp1_speedup",

@@ -3,14 +3,13 @@ the noisy-PUM model over a programming-noise sweep (no CIFAR-10 offline;
 synthetic class-conditional images, random-init ResNet-20)."""
 from __future__ import annotations
 
-from typing import List, Tuple
 
-Row = Tuple[str, float, str]
+Row = tuple[str, float, str]
 
 
-def sweep() -> List[Row]:
+def sweep() -> list[Row]:
     from repro.apps.resnet_app import agreement_under_noise
-    rows: List[Row] = []
+    rows: list[Row] = []
     for sigma in (0.0, 0.02, 0.05, 0.1, 0.3):
         agr = agreement_under_noise(sigma, n=12, width=8)
         rows.append((f"noise_accuracy/sigma_{sigma}", agr, "agreement"))

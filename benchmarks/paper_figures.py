@@ -6,11 +6,10 @@ the final column so EXPERIMENTS.md diffs are mechanical.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
 
 from repro.core import costmodel as cm
 
-Row = Tuple[str, float, str]
+Row = tuple[str, float, str]
 
 
 def _models():
@@ -18,10 +17,10 @@ def _models():
             cm.AppAccel(), cm.GPU())
 
 
-def fig07_motivation() -> List[Row]:
+def fig07_motivation() -> list[Row]:
     """Fig. 7: AES throughput of digital / analog+CPU / naive hybrid sweep,
     normalised to digital PUM with OSCAR."""
-    rows: List[Row] = []
+    rows: list[Row] = []
     d0 = cm.DigitalPUM().aes().throughput
     rows.append(("fig07/digital_oscar", 1.0, "x"))
     rows.append(("fig07/digital_ideal",
@@ -42,9 +41,9 @@ def fig07_motivation() -> List[Row]:
     return rows
 
 
-def fig13_throughput() -> List[Row]:
+def fig13_throughput() -> list[Row]:
     """Fig. 13: throughput normalised to Baseline, all three workloads."""
-    rows: List[Row] = []
+    rows: list[Row] = []
     paper = {"aes": 59.4, "resnet20": 14.8, "encoder": 45.6}
     for wl in ("aes", "resnet20", "encoder"):
         rs = {m.name: getattr(m, wl)() for m in _models()}
@@ -57,9 +56,9 @@ def fig13_throughput() -> List[Row]:
     return rows
 
 
-def fig14_aes_breakdown() -> List[Row]:
+def fig14_aes_breakdown() -> list[Row]:
     """Fig. 14: AES per-kernel latency breakdown (cycles per block)."""
-    rows: List[Row] = []
+    rows: list[Row] = []
     d = cm.DarthPUM("sar").aes()
     for k in ("sub_c", "mix_c", "ark_c", "adc_cyc", "dce_cyc"):
         rows.append((f"fig14/darth/{k}", d.detail[k], "cycles"))
@@ -71,9 +70,9 @@ def fig14_aes_breakdown() -> List[Row]:
     return rows
 
 
-def fig15_resnet_layers() -> List[Row]:
+def fig15_resnet_layers() -> list[Row]:
     """Fig. 15: per-layer speedup for ResNet-20, DARTH vs Baseline."""
-    rows: List[Row] = []
+    rows: list[Row] = []
     d = cm.DarthPUM("sar").resnet20()
     b = cm.BaselineCPUAnalog().resnet20()
     for name in d.detail:
@@ -83,9 +82,9 @@ def fig15_resnet_layers() -> List[Row]:
     return rows
 
 
-def fig16_energy() -> List[Row]:
+def fig16_energy() -> list[Row]:
     """Fig. 16: energy savings normalised to Baseline."""
-    rows: List[Row] = []
+    rows: list[Row] = []
     paper = {"aes": 39.6, "resnet20": 51.2, "encoder": 110.7}
     for wl in ("aes", "resnet20", "encoder"):
         rs = {m.name: getattr(m, wl)() for m in _models()}
@@ -98,9 +97,9 @@ def fig16_energy() -> List[Row]:
     return rows
 
 
-def fig17_adc() -> List[Row]:
+def fig17_adc() -> list[Row]:
     """Fig. 17: SAR vs ramp ADCs (throughput ratio per workload)."""
-    rows: List[Row] = []
+    rows: list[Row] = []
     for wl in ("aes", "resnet20", "encoder"):
         s = getattr(cm.DarthPUM("sar"), wl)()
         r = getattr(cm.DarthPUM("ramp"), wl)()
@@ -114,9 +113,9 @@ def fig17_adc() -> List[Row]:
     return rows
 
 
-def fig18_gpu() -> List[Row]:
+def fig18_gpu() -> list[Row]:
     """Fig. 18: iso-area comparison with the RTX 4090."""
-    rows: List[Row] = []
+    rows: list[Row] = []
     sp = []
     es = []
     for wl in ("aes", "resnet20", "encoder"):

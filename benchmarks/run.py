@@ -14,6 +14,7 @@ so the perf trajectory is tracked across PRs:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 
@@ -28,7 +29,7 @@ def collect(only: set, skip_micro: bool, small: bool) -> list:
         rows.extend(fn())
 
     if not skip_micro and (not only or "micro" in only):
-        for name, fn in microbench.ALL_MICRO.items():
+        for fn in microbench.ALL_MICRO.values():
             rows.extend(fn(small=small))
 
     if not only or "noise" in only:
@@ -43,11 +44,9 @@ def collect(only: set, skip_micro: bool, small: bool) -> list:
             for line in f.read().strip().splitlines()[1:]:
                 parts = line.split(",")
                 if len(parts) >= 3:
-                    try:
+                    with contextlib.suppress(ValueError):
                         rows.append((f"roofline/{parts[0]}",
                                      float(parts[1]), parts[2]))
-                    except ValueError:
-                        pass
     return rows
 
 

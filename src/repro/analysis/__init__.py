@@ -1,0 +1,20 @@
+"""Static analysis of the serving hot path.
+
+Traces the real serving graphs (prefill / chunked prefill / decode slot
+step, across state families x execution modes x KV layouts x tensor-
+parallel widths) and runs a rule engine over the jaxprs, statically
+pinning the graph-structure invariants the serving stack's correctness
+rests on — the bug classes PR 3/4/5 each shipped an oracle-equivalence
+counterexample for.
+
+Entry points:
+  * ``python -m repro.analysis.audit`` (or ``make audit``) — full grid.
+  * ``repro.analysis.walker.index_graph`` — the jaxpr walker.
+  * ``repro.analysis.rules.ALL_RULES`` — the invariant catalog.
+  * ``repro.analysis.mutations`` — the auditor's teeth: self-tests that
+    knock out one barrier / mask / donation and assert the rule fires.
+"""
+from repro.analysis.walker import EqnRecord, GraphIndex, index_graph
+from repro.analysis.report import Violation
+
+__all__ = ["EqnRecord", "GraphIndex", "index_graph", "Violation"]

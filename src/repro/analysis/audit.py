@@ -1,0 +1,109 @@
+"""The audit CLI: trace the serving grid, run the rule catalog, report.
+
+    python -m repro.analysis.audit [--families ...] [--modes ...]
+        [--layouts ...] [--tp 1 4] [--json AUDIT.json] [--self-test]
+
+Exits non-zero on any rule violation, and (with ``--self-test``) when a
+mutation fails to make its rule fire.  ``make audit`` runs the full
+grid under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so
+the tp=4 graphs trace on any machine; on fewer devices requested tp
+widths that don't fit are dropped with a note.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from collections.abc import Sequence
+
+import jax
+
+from repro.analysis import graphs as graphs_mod
+from repro.analysis.report import (Violation, render_table, to_json,
+                                   write_json)
+from repro.analysis.rules import ALL_RULES
+from repro.analysis.walker import index_graph
+
+
+def check_graphs(serving_graphs, rules=None, log=lambda s: None,
+                 ) -> list[Violation]:
+    rules = ALL_RULES if rules is None else rules
+    violations: list[Violation] = []
+    for g in serving_graphs:
+        idx = index_graph(g.closed, g.invar_labels)
+        before = len(violations)
+        for rule in rules:
+            violations += rule.check(g, idx)
+        n = len(violations) - before
+        log(f"audited {g.name}: "
+            f"{'ok' if n == 0 else f'{n} violation(s)'}")
+    return violations
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="repro.analysis.audit",
+        description="static invariant audit of the serving hot path")
+    p.add_argument("--families", nargs="+",
+                   default=sorted(graphs_mod.FAMILIES),
+                   choices=sorted(graphs_mod.FAMILIES))
+    p.add_argument("--modes", nargs="+", default=list(graphs_mod.MODES),
+                   choices=list(graphs_mod.MODES))
+    p.add_argument("--layouts", nargs="+",
+                   default=list(graphs_mod.LAYOUTS),
+                   choices=list(graphs_mod.LAYOUTS))
+    p.add_argument("--tp", nargs="+", type=int,
+                   default=list(graphs_mod.TPS))
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="write the structured report here")
+    p.add_argument("--self-test", action="store_true",
+                   help="also run the mutation self-tests")
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args(argv)
+
+    log = (lambda s: None) if args.quiet else \
+        (lambda s: print(s, flush=True))
+    n_dev = len(jax.devices())
+    tps = [t for t in args.tp if t <= n_dev]
+    for t in args.tp:
+        if t > n_dev:
+            print(f"note: dropping tp={t} (only {n_dev} devices; run "
+                  f"under XLA_FLAGS=--xla_force_host_platform_device_"
+                  f"count=8 or `make audit`)", flush=True)
+
+    t0 = time.time()
+    serving_graphs = graphs_mod.build_grid(
+        families=args.families, modes=args.modes, layouts=args.layouts,
+        tps=tps, log=log)
+    violations = check_graphs(serving_graphs, log=log)
+
+    self_test = None
+    if args.self_test:
+        from repro.analysis.mutations import run_self_test
+        self_test = run_self_test(log=log)
+
+    names = [g.name for g in serving_graphs]
+    rule_names = [r.name for r in ALL_RULES]
+    print(f"\naudited {len(names)} graphs x {len(rule_names)} rules "
+          f"in {time.time() - t0:.1f}s: "
+          f"{len(violations)} violation(s)")
+    if violations:
+        print(render_table(sorted({v.graph for v in violations}),
+                           rule_names, violations))
+    failed_self = [t for t in (self_test or []) if not t["fired"]]
+    if self_test is not None:
+        ok = len(self_test) - len(failed_self)
+        print(f"mutation self-tests: {ok}/{len(self_test)} fired")
+        for t in failed_self:
+            print(f"  MUTATION NOT DETECTED: {t['name']} (expected "
+                  f"rule {t['rule']})")
+
+    if args.json:
+        write_json(args.json, to_json(names, rule_names, violations,
+                                      self_test))
+        print(f"report written to {args.json}")
+    return 1 if (violations or failed_self) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,266 @@
+"""Trace the real serving graphs for the auditor.
+
+One *cell* of the grid is (family, mode, layout, tp); per cell the
+builder constructs the actual serving objects (``ServeEngine`` /
+``ContinuousBatchingScheduler`` — the same constructors the tests and
+the launcher use, so the audited jaxprs ARE the served jaxprs) and
+*traces* their jitted steps without executing them:
+
+  * ``prefill``       — the engine's jitted monolithic prefill,
+  * ``decode``        — the scheduler's slot-wise decode step,
+  * ``chunk_prefill`` — the paged streaming-prefill step,
+  * ``scan_decode``   — the engine's fused ``lax.scan`` decode,
+
+plus ``micro`` graphs for the bit-plane arithmetic itself (the packed
+serving fast path contracts against the recombined weight, so the
+in-graph slicing/recombination region is audited via the no-prepack
+cell and these micro graphs).
+
+Donation-bearing graphs also carry their lowered MLIR text (the
+``tf.aliasing_output`` attributes are only visible post-lowering) and a
+retrace of the same jaxpr (the single-compilation rule compares them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Sequence
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import PUMConfig, small_test_config
+from repro.core import bitslice
+from repro.launch.mesh import make_tp_mesh
+from repro.models import lm, transformer
+from repro.serve import kv_pool
+from repro.serve.scheduler import ContinuousBatchingScheduler
+
+# num_kv_heads=4 so the KV-head axis divides every tp in the grid
+# (mirrors tests/test_tp_serving.py)
+FAMILIES = {
+    "dense": dict(num_kv_heads=4),
+    "xlstm": dict(num_kv_heads=4, xlstm_slstm_every=2),
+    "hybrid": dict(num_kv_heads=4, attn_period=2),
+}
+MODES = ("bf16", "int8", "pum")
+LAYOUTS = ("contiguous", "paged")
+TPS = (1, 4)
+
+MAX_LEN = 24
+NUM_SLOTS = 2
+BLOCK_SIZE = 4
+PREFILL_LEN = 5
+
+
+@dataclasses.dataclass
+class ServingGraph:
+    name: str
+    kind: str            # prefill | decode | chunk_prefill | scan_decode | micro
+    family: str
+    mode: str
+    layout: str
+    tp: int
+    closed: Any          # ClosedJaxpr
+    invar_labels: list[str]
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _flat_labels(argnames: Sequence[str], args: Sequence[Any]) -> list[str]:
+    labels: list[str] = []
+    for name, a in zip(argnames, args):
+        flat, _ = jax.tree_util.tree_flatten_with_path(a)
+        for path, _leaf in flat:
+            labels.append(name + jax.tree_util.keystr(path))
+    return labels
+
+
+def _trace(jitted, args, kwargs=None):
+    kwargs = kwargs or {}
+    return jitted.trace(*args, **kwargs)
+
+
+def _graph(name: str, kind: str, family: str, mode: str, layout: str,
+           tp: int, traced, labels: list[str], meta: dict[str, Any],
+           ) -> ServingGraph:
+    closed = traced.jaxpr
+    n = len(closed.jaxpr.invars)
+    if len(labels) != n:          # pragma: no cover - layout drift guard
+        labels = (labels + [f"invar{i}" for i in range(len(labels), n)])[:n]
+    return ServingGraph(name, kind, family, mode, layout, tp, closed,
+                        labels, meta)
+
+
+def build_cell(family: str, mode: str, layout: str, tp: int, *,
+               prepack: bool | None = None, lower: bool = True,
+               kinds: Sequence[str] | None = None,
+               ) -> list[ServingGraph]:
+    """Build all audited graphs of one grid cell.
+
+    ``kinds`` restricts to a subset (the mutation self-tests trace only
+    the graph their rule reads).  ``lower=False`` skips MLIR lowering
+    (the donation rule then has nothing to check).
+    """
+    cfg = small_test_config(**FAMILIES[family], pum=PUMConfig(mode=mode))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    mesh = make_tp_mesh(tp) if tp > 1 else None
+    paged = layout == "paged"
+    sched = ContinuousBatchingScheduler(
+        cfg, params, num_slots=NUM_SLOTS, max_len=MAX_LEN,
+        prepack=prepack, mesh=mesh,
+        **(dict(kv_block_size=BLOCK_SIZE, chunked_prefill=True)
+           if paged else {}))
+    eng = sched.engine
+    base_meta = dict(
+        inference=True,
+        p_len=transformer.period(eng.cfg),
+        has_kv=kv_pool.has_kv_cache(eng.cfg),
+        has_recurrent=kv_pool.has_recurrent_state(eng.cfg),
+        prepack=prepack if prepack is not None else mode != "bf16",
+    )
+    tag = f"{family}/{mode}/{layout}/tp{tp}"
+    want = set(kinds) if kinds is not None else {
+        "prefill", "decode", "chunk_prefill", "scan_decode"}
+    graphs: list[ServingGraph] = []
+
+    b = NUM_SLOTS
+    if "prefill" in want and not paged:
+        args = (eng.params, jnp.zeros((1, PREFILL_LEN), jnp.int32), None)
+        with eng.mesh_ctx():
+            tr = _trace(eng._prefill, args)
+        graphs.append(_graph(
+            f"prefill/{tag}", "prefill", family, mode, layout, tp, tr,
+            _flat_labels(("params", "tokens", "encoder_frames"), args),
+            dict(base_meta)))
+
+    if "decode" in want:
+        step_args = [sched.params, sched.states,
+                     jnp.zeros((b, 1), jnp.int32),      # cur_tok
+                     jnp.zeros((b,), jnp.int32),        # cache_index
+                     jnp.zeros((b, 2), jnp.uint32),     # keys
+                     jnp.zeros((b,), bool),             # active
+                     jnp.zeros((b,), jnp.float32),      # temp
+                     jnp.full((b,), -1, jnp.int32),     # eos
+                     jnp.zeros((b,), jnp.int32),        # gen
+                     jnp.ones((b,), jnp.int32)]         # max_toks
+        names = ["params", "states", "cur_tok", "cache_index", "keys",
+                 "active", "temp", "eos", "gen", "max_toks"]
+        if paged:
+            step_args.append(
+                jnp.zeros((b, sched.table_width), jnp.int32))
+            names.append("block_table")
+        with eng.mesh_ctx():
+            tr = _trace(sched._step, step_args)
+            lowered = tr.lower().as_text() if lower else None
+            # clear the jit trace cache so the retrace genuinely re-runs
+            # the Python step (a cached trace would hide
+            # trace-dependent-constant bugs from the comparison)
+            sched._step.clear_cache()
+            retrace = str(_trace(sched._step, step_args).jaxpr.jaxpr)
+        meta = dict(base_meta,
+                    retrace_text=retrace,
+                    lowered_text=lowered,
+                    expected_donated=len(
+                        jax.tree_util.tree_leaves(sched.states)),
+                    token_label="cur_tok",
+                    expected_token_shape=(b, 1))
+        graphs.append(_graph(
+            f"decode/{tag}", "decode", family, mode, layout, tp, tr,
+            _flat_labels(names, step_args), meta))
+
+    if "chunk_prefill" in want and paged:
+        cp_args = (sched.params, sched.states,
+                   jnp.zeros((1, BLOCK_SIZE), jnp.int32),
+                   jnp.int32(0),
+                   jnp.zeros((1, sched.table_width), jnp.int32),
+                   jnp.int32(0))
+        cp_names = ("params", "states", "tokens", "start", "table_row",
+                    "slot")
+        with eng.mesh_ctx():
+            tr = _trace(sched._chunk_prefill, cp_args)
+            lowered = tr.lower().as_text() if lower else None
+            sched._chunk_prefill.clear_cache()
+            retrace = str(_trace(sched._chunk_prefill, cp_args).jaxpr.jaxpr)
+        meta = dict(base_meta,
+                    retrace_text=retrace,
+                    lowered_text=lowered,
+                    expected_donated=len(
+                        jax.tree_util.tree_leaves(sched.states)),
+                    token_label="tokens",
+                    expected_token_shape=(1, BLOCK_SIZE))
+        graphs.append(_graph(
+            f"chunk_prefill/{tag}", "chunk_prefill", family, mode, layout,
+            tp, tr, _flat_labels(cp_names, cp_args), meta))
+
+    if "scan_decode" in want and not paged:
+        states = lm.init_state(eng.cfg, b, MAX_LEN)
+        sg_args = (eng.params, states, jnp.zeros((b, 1), jnp.int32),
+                   jax.random.PRNGKey(0), jnp.int32(PREFILL_LEN), None)
+        sg_names = ("params", "states", "tok0", "key", "index",
+                    "encoder_out")
+        kw = dict(steps=4, temperature=0.0)
+        with eng.mesh_ctx():
+            tr = _trace(eng._scan_gen, sg_args, kw)
+            lowered = tr.lower().as_text() if lower else None
+        meta = dict(base_meta,
+                    lowered_text=lowered,
+                    expected_donated=len(
+                        jax.tree_util.tree_leaves(states)))
+        graphs.append(_graph(
+            f"scan_decode/{tag}", "scan_decode", family, mode, layout,
+            tp, tr, _flat_labels(sg_names, sg_args), meta))
+
+    return graphs
+
+
+def build_micro_graphs() -> list[ServingGraph]:
+    """The bit-plane arithmetic in isolation: the slicing/recombination
+    dataflow the no-float rule audits (the packed serving path contracts
+    the recombined weight, so this region only appears in-graph for
+    no-prepack serving and the kernel oracle)."""
+    xq = jnp.zeros((3, 64), jnp.int32)
+    wq = jnp.zeros((64, 32), jnp.int32)
+    planes = jnp.zeros((4, 64, 32), jnp.int8)
+    out = []
+    tr = jax.jit(
+        lambda a, b: bitslice.bitsliced_matmul_exact(a, b, 8, 2)).trace(
+            xq, wq)
+    out.append(ServingGraph(
+        "micro/bitslice_exact", "micro", "-", "pum", "-", 1, tr.jaxpr,
+        ["xq", "wq"], dict(inference=True, expects_bitplanes=True)))
+    tr = jax.jit(
+        lambda a, p: bitslice.bitsliced_matmul_planes(a, p, 2)).trace(
+            xq, planes)
+    out.append(ServingGraph(
+        "micro/bitslice_planes", "micro", "-", "pum", "-", 1, tr.jaxpr,
+        ["xq", "planes"], dict(inference=True, expects_bitplanes=True)))
+    return out
+
+
+def build_grid(families: Sequence[str] = tuple(FAMILIES),
+               modes: Sequence[str] = MODES,
+               layouts: Sequence[str] = LAYOUTS,
+               tps: Sequence[int] = TPS, *, lower: bool = True,
+               micro: bool = True, log=lambda s: None,
+               ) -> list[ServingGraph]:
+    """The full audit grid (plus micro + the no-prepack pum cell)."""
+    graphs: list[ServingGraph] = []
+    for tp in tps:
+        for family in families:
+            for mode in modes:
+                for layout in layouts:
+                    log(f"tracing {family}/{mode}/{layout}/tp{tp}")
+                    graphs += build_cell(family, mode, layout, tp,
+                                         lower=lower)
+    if "pum" in modes and 1 in tps and "contiguous" in layouts:
+        # per-call-quantised serving: slicing + recombination happen
+        # in-graph, covering the no-float-in-PUM-path rule end to end
+        log("tracing dense/pum/contiguous/tp1 (no prepack)")
+        for g in build_cell("dense", "pum", "contiguous", 1,
+                            prepack=False, lower=lower):
+            g.name += "/noprepack"
+            g.meta["expects_bitplanes"] = True
+            graphs.append(g)
+    if micro:
+        graphs += build_micro_graphs()
+    return graphs

@@ -1,0 +1,199 @@
+"""Mutation self-tests: prove the auditor has teeth.
+
+Each mutation monkeypatches exactly one serving-stack hook — one
+barrier alias, the block-table mask, the donation argnums, the
+freeze-inactive select, the exact-precision contraction — rebuilds the
+(freshly traced) serving graphs of a small grid cell, and asserts the
+*corresponding* rule fires.  A rule that stays green under its mutation
+is decoration, not verification.
+
+The patches go through module-level aliases planted for exactly this
+purpose (``pum_linear._barrier``, ``scheduler._mask_block_table``,
+``scheduler._STEP_DONATE``, ...), so each knock-out is surgical: only
+the invariant under test disappears, everything else still traces.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+from collections.abc import Callable, Sequence
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Mutation:
+    name: str
+    description: str
+    rule: str                       # the rule that must fire
+    cell: dict[str, Any]            # graphs.build_cell kwargs
+    patches: Callable[[], Sequence[tuple[Any, str, Any]]]
+    needs_tp: bool = False
+
+
+def _identity(x):
+    return x
+
+
+def _lowprec_int_matmul(x_q, w_q, *, x_bound=127, w_bound=127):
+    """The classic fast-but-wrong contraction: f32 accumulation at
+    default precision (TF32 on GPU truncates 14-bit partial products)."""
+    dims = (((x_q.ndim - 1,), (0,)), ((), ()))
+    acc = jax.lax.dot_general(x_q.astype(jnp.float32),
+                              w_q.astype(jnp.float32),
+                              dimension_numbers=dims,
+                              preferred_element_type=jnp.float32)
+    return acc.astype(jnp.int32)
+
+
+def _float_combine_planes(partials, bits_per_slice):
+    """Shift-and-add via f32 pow-of-two weights: numerically identical
+    until a partial sum exceeds 2^24, then silently lossy."""
+    with jax.named_scope("bitplanes"):
+        n = partials.shape[0]
+        shifts = jnp.arange(n, dtype=jnp.float32) * bits_per_slice
+        weights = jnp.exp2(shifts).reshape((n,) + (1,) * (partials.ndim - 1))
+        acc = jnp.sum(partials.astype(jnp.float32) * weights, axis=0)
+        return acc.astype(jnp.int32)
+
+
+_RETRACE_COUNTER = itertools.count()
+
+
+def _counter_mask_block_table():
+    """A block-table mask that bakes a Python-side counter into the
+    traced graph: every retrace inlines a different literal, so the jit
+    cache can never be warm (the trace-dependent-constant bug).  The
+    counter value enters as a weak python int so it shows up as an
+    inline Literal in the jaxpr text the rule compares."""
+    def mask(table, active):
+        with jax.named_scope("mask_table"):
+            masked = table * active.astype(table.dtype)[:, None]
+            return masked + (next(_RETRACE_COUNTER) % 2)
+    return mask
+
+
+def all_mutations() -> list[Mutation]:
+    from repro.core import bitslice, pum_linear
+    from repro.models import lm, transformer
+    from repro.serve import kv_pool, scheduler
+
+    decode_cell = dict(family="dense", mode="int8", layout="paged", tp=1,
+                       kinds=("decode",), lower=False)
+    return [
+        Mutation(
+            "drop-qact-barrier",
+            "pum_linear's quantiser-input/output barriers become "
+            "identity",
+            "barrier-coverage", decode_cell,
+            lambda: [(pum_linear, "_barrier", _identity)]),
+        Mutation(
+            "drop-block-barrier",
+            "the block-boundary residual pin becomes identity",
+            "barrier-coverage", decode_cell,
+            lambda: [(transformer, "_barrier", _identity)]),
+        Mutation(
+            "drop-embed-barrier",
+            "the embedding-lookup pin becomes identity",
+            "barrier-coverage", decode_cell,
+            lambda: [(lm, "_barrier", _identity)]),
+        Mutation(
+            "drop-table-mask",
+            "the slot step stops masking the block table with the "
+            "active mask",
+            "masked-scatter", decode_cell,
+            lambda: [(scheduler, "_mask_block_table",
+                      lambda table, active: table)]),
+        Mutation(
+            "drop-freeze",
+            "inactive rows' recurrent state updates unconditionally",
+            "masked-scatter",
+            dict(family="xlstm", mode="int8", layout="paged", tp=1,
+                 kinds=("decode",), lower=False),
+            lambda: [(kv_pool, "freeze_inactive_rows",
+                      lambda old, new, active: new)]),
+        Mutation(
+            "drop-donation",
+            "the slot step stops donating the decode-state tree",
+            "donation",
+            dict(family="dense", mode="int8", layout="paged", tp=1,
+                 kinds=("decode",), lower=True),
+            lambda: [(scheduler, "_STEP_DONATE", ())]),
+        Mutation(
+            "float-accumulator",
+            "the exact int contraction runs at default f32 precision",
+            "int-accum", decode_cell,
+            lambda: [(bitslice, "int_matmul", _lowprec_int_matmul)]),
+        Mutation(
+            "float-bitplanes",
+            "plane recombination shifts-and-adds in f32 instead of "
+            "integer",
+            "pum-path",
+            dict(family="dense", mode="pum", layout="contiguous", tp=1,
+                 prepack=False, kinds=("decode",), lower=False),
+            lambda: [(bitslice, "combine_planes", _float_combine_planes)]),
+        Mutation(
+            "retrace-constant",
+            "the table mask bakes a Python counter into the trace, so "
+            "retracing yields a different graph",
+            "single-compilation", decode_cell,
+            lambda: [(scheduler, "_mask_block_table",
+                      _counter_mask_block_table())]),
+        Mutation(
+            "drop-accum-constraint",
+            "row-sharded accumulators never close with a psum "
+            "constraint",
+            "int-accum",
+            dict(family="dense", mode="int8", layout="paged", tp=4,
+                 kinds=("decode",), lower=False),
+            lambda: [(pum_linear, "_close_accumulator", _identity)],
+            needs_tp=True),
+    ]
+
+
+@contextlib.contextmanager
+def _applied(patches: Sequence[tuple[Any, str, Any]]):
+    saved = [(mod, attr, getattr(mod, attr)) for mod, attr, _ in patches]
+    try:
+        for mod, attr, val in patches:
+            setattr(mod, attr, val)
+        yield
+    finally:
+        for mod, attr, val in saved:
+            setattr(mod, attr, val)
+
+
+def run_self_test(log=lambda s: None) -> list[dict[str, Any]]:
+    """Run every mutation; returns one record per mutation with
+    ``fired`` = whether the expected rule produced a violation (the
+    pass criterion), and the violations it raised."""
+    from repro.analysis.graphs import build_cell
+    from repro.analysis.rules import ALL_RULES
+    from repro.analysis.walker import index_graph
+
+    results: list[dict[str, Any]] = []
+    n_dev = len(jax.devices())
+    for m in all_mutations():
+        if m.needs_tp and n_dev < m.cell.get("tp", 1):
+            log(f"self-test {m.name}: SKIPPED (needs {m.cell['tp']} "
+                f"devices, have {n_dev})")
+            results.append(dict(name=m.name, rule=m.rule, fired=True,
+                                skipped=True, violations=[]))
+            continue
+        with _applied(m.patches()):
+            graphs = build_cell(**m.cell)
+            violations = []
+            for g in graphs:
+                idx = index_graph(g.closed, g.invar_labels)
+                for rule in ALL_RULES:
+                    violations += rule.check(g, idx)
+        fired = any(v.rule == m.rule for v in violations)
+        log(f"self-test {m.name}: rule {m.rule} "
+            f"{'fired (ok)' if fired else 'DID NOT FIRE'}")
+        results.append(dict(
+            name=m.name, rule=m.rule, fired=fired, skipped=False,
+            violations=[dataclasses.asdict(v) for v in violations]))
+    return results

@@ -1,0 +1,59 @@
+"""Audit report rendering: structured JSON + human table."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections.abc import Sequence
+from typing import Any
+
+
+@dataclasses.dataclass
+class Violation:
+    rule: str
+    graph: str
+    message: str
+
+
+def render_table(graph_names: Sequence[str], rule_names: Sequence[str],
+                 violations: Sequence[Violation]) -> str:
+    """Per-graph x per-rule OK/FAIL grid plus the violation details."""
+    bad: dict[str, dict[str, int]] = {}
+    for v in violations:
+        bad.setdefault(v.graph, {}).setdefault(v.rule, 0)
+        bad[v.graph][v.rule] += 1
+    gw = max([len("graph")] + [len(g) for g in graph_names])
+    cols = [r[:14] for r in rule_names]
+    header = f"{'graph':<{gw}}  " + "  ".join(f"{c:<14}" for c in cols)
+    lines = [header, "-" * len(header)]
+    for g in graph_names:
+        cells = []
+        for r in rule_names:
+            n = bad.get(g, {}).get(r, 0)
+            cells.append(f"{'ok' if n == 0 else f'FAIL({n})':<14}")
+        lines.append(f"{g:<{gw}}  " + "  ".join(cells))
+    if violations:
+        lines.append("")
+        lines.append(f"{len(violations)} violation(s):")
+        for v in violations:
+            lines.append(f"  [{v.rule}] {v.graph}: {v.message}")
+    return "\n".join(lines)
+
+
+def to_json(graph_names: Sequence[str], rule_names: Sequence[str],
+            violations: Sequence[Violation],
+            self_test: list[dict[str, Any]] | None = None,
+            ) -> dict[str, Any]:
+    return {
+        "graphs": list(graph_names),
+        "rules": list(rule_names),
+        "violations": [dataclasses.asdict(v) for v in violations],
+        "self_test": self_test,
+        "ok": not violations and all(
+            t["fired"] for t in (self_test or [])),
+    }
+
+
+def write_json(path: str, payload: dict[str, Any]) -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -1,0 +1,23 @@
+"""The invariant catalog: one rule per bug class the repo has shipped a
+fix for.  Each rule takes (ServingGraph, GraphIndex) and returns
+violations; ``ALL_RULES`` is the set ``make audit`` runs.
+"""
+from repro.analysis.rules.accumulators import IntegerAccumulators
+from repro.analysis.rules.barriers import BarrierCoverage
+from repro.analysis.rules.compilation import SingleCompilation
+from repro.analysis.rules.donation import Donation
+from repro.analysis.rules.pum_path import PumPath
+from repro.analysis.rules.scatter import MaskedScatter
+
+ALL_RULES = [
+    BarrierCoverage(),
+    MaskedScatter(),
+    IntegerAccumulators(),
+    Donation(),
+    SingleCompilation(),
+    PumPath(),
+]
+
+__all__ = ["ALL_RULES", "BarrierCoverage", "MaskedScatter",
+           "IntegerAccumulators", "Donation", "SingleCompilation",
+           "PumPath"]

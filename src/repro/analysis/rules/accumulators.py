@@ -1,0 +1,95 @@
+"""int-accum: quantised contractions close on exact accumulators.
+
+Pins the exactness argument under the whole TP-serving suite: a
+row-sharded (K-split) ``pum_linear`` is bit-identical to the
+single-tile contraction *only because* the per-shard partials meet in a
+psum as exact integers — int32, or f32 strictly inside its 24-bit
+integer window (``K * x_bound * w_bound < 2^24``) at HIGHEST precision.
+A raw bf16 accumulator (or a default-precision f32 dot, which TF32
+hardware truncates) silently breaks bitwise equality.  Two checks:
+
+  * every ``dot_general`` inside a ``pum_linear`` scope in an int8/pum
+    serving graph accumulates in int32, or in f32 with HIGHEST
+    precision and a statically provable 24-bit bound;
+  * under tp > 1, every MVM instance closes with a ``tp_accum``
+    sharding constraint whose operand is integer-typed (the constraint
+    IS the psum once partitioned — a float one would reduce in float).
+"""
+from __future__ import annotations
+
+import math
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.report import Violation
+
+_MVM = re.compile(r"pum_linear\d+")
+_F32_BOUND = 127 * 127          # 8-bit symmetric operands
+
+
+def _contraction_k(eqn) -> int:
+    (lhs_c, _rhs_c), _ = eqn.params["dimension_numbers"]
+    shape = eqn.invars[0].aval.shape
+    return math.prod(shape[d] for d in lhs_c) if lhs_c else 1
+
+
+def _is_highest(precision) -> bool:
+    hp = jax.lax.Precision.HIGHEST
+    if precision is None:
+        return False
+    if isinstance(precision, tuple):
+        return all(p == hp for p in precision)
+    return precision == hp
+
+
+class IntegerAccumulators:
+    name = "int-accum"
+
+    def check(self, g, idx) -> list[Violation]:
+        if g.kind == "micro" or g.mode not in ("int8", "pum") \
+                or not g.meta.get("inference"):
+            return []
+        v: list[Violation] = []
+
+        def fail(msg):
+            v.append(Violation(self.name, g.name, msg))
+
+        for r in idx.records:
+            if r.prim != "dot_general" \
+                    or not any(_MVM.fullmatch(c) for c in r.stack):
+                continue
+            where = "/".join(r.stack)
+            dt = r.eqn.outvars[0].aval.dtype
+            if jnp.issubdtype(dt, jnp.integer):
+                continue
+            if dt == jnp.float32:
+                k = _contraction_k(r.eqn)
+                if not _is_highest(r.eqn.params.get("precision")):
+                    fail(f"dot at {where}: f32 accumulator without "
+                         f"HIGHEST precision (TF32 truncation would "
+                         f"break exactness)")
+                elif k * _F32_BOUND >= (1 << 24):
+                    fail(f"dot at {where}: f32 accumulator with K={k} "
+                         f"overflows the 24-bit exact-integer window")
+                continue
+            fail(f"dot at {where}: contraction accumulates in {dt} — "
+                 f"quantised serving MVMs must close on int32 or "
+                 f"bounded f32")
+
+        if g.tp > 1:
+            for key, recs in sorted(
+                    idx.scope_instances(r"pum_linear\d+").items()):
+                accs = [r for r in recs
+                        if r.prim == "sharding_constraint"
+                        and "tp_accum" in r.stack]
+                if not accs:
+                    fail(f"{key}: no closing tp_accum constraint — the "
+                         f"K-split partials never meet in a psum")
+                for r in accs:
+                    dt = r.eqn.outvars[0].aval.dtype
+                    if not jnp.issubdtype(dt, jnp.integer):
+                        fail(f"{key}: tp_accum constraint on {dt} — the "
+                             f"inter-tile reduction would run in float")
+        return v

@@ -1,0 +1,76 @@
+"""barrier-coverage: every bf16 rounding point the serving stack relies
+on is pinned by ``optimization_barrier``.
+
+Pins PR 5's bug class: XLA computes bf16 elementwise regions in f32 and
+rounds only at fusion-cluster boundaries, so cluster boundaries that
+move (a sharding constraint, a collective, any rewrite) silently change
+which bits downstream consumers see.  Serving mode pins four families
+of rounding points; each is wrapped in a ``named_scope`` anchor whose
+*contents* are guaranteed non-empty, so removing the barrier (or the
+whole pinned region) is statically visible:
+
+  * ``pum_linear<N>/qact``   — the activation quantiser's input
+    (int8/pum modes: the abs-max scale must see stored bf16 bits);
+  * ``pum_linear<N>/pin_in`` — the bf16 MVM operand (bf16 mode);
+  * ``pum_linear<N>/pin_out``— every MVM's output;
+  * ``embed``                — the embedding lookup;
+  * ``layer<j>/.../block_tail`` — every block's residual boundary
+    (exactly ``period(cfg)`` instances must exist — an anchored count,
+    so deleting a whole block's pin is detected, not just emptying it).
+"""
+from __future__ import annotations
+
+
+from repro.analysis.report import Violation
+
+BARRIER = "optimization_barrier"
+_SERVING_KINDS = ("prefill", "decode", "chunk_prefill", "scan_decode")
+
+
+class BarrierCoverage:
+    name = "barrier-coverage"
+
+    def check(self, g, idx) -> list[Violation]:
+        if g.kind not in _SERVING_KINDS or not g.meta.get("inference"):
+            return []
+        v: list[Violation] = []
+
+        def fail(msg):
+            v.append(Violation(self.name, g.name, msg))
+
+        def has_barrier(recs, scope):
+            return any(r.prim == BARRIER and scope in r.stack
+                       for r in recs)
+
+        mvms = idx.scope_instances(r"pum_linear\d+")
+        if not mvms:
+            fail("no pum_linear scopes found — MVM tagging is gone, the "
+                 "rule has nothing to anchor on")
+        for key, recs in sorted(mvms.items()):
+            if not has_barrier(recs, "pin_out"):
+                fail(f"{key}: output not pinned (no optimization_barrier "
+                     f"in pin_out)")
+            if g.mode in ("int8", "pum") and not has_barrier(recs, "qact"):
+                fail(f"{key}: activation quantiser input not pinned (no "
+                     f"optimization_barrier in qact)")
+            if g.mode == "bf16" and not has_barrier(recs, "pin_in"):
+                fail(f"{key}: bf16 MVM operand not pinned (no "
+                     f"optimization_barrier in pin_in)")
+
+        emb = idx.scope_instances("embed")
+        if len(emb) != 1:
+            fail(f"expected exactly 1 embed scope, found {len(emb)}")
+        for key, recs in emb.items():
+            if not any(r.prim == BARRIER for r in recs):
+                fail(f"{key}: embedding lookup not pinned")
+
+        layers = idx.scope_instances(r"layer\d+")
+        p_len = g.meta.get("p_len")
+        if p_len is not None and len(layers) != p_len:
+            fail(f"expected {p_len} layer scopes (one per block in the "
+                 f"repeating period), found {len(layers)}")
+        for key, recs in sorted(layers.items()):
+            if not has_barrier(recs, "block_tail"):
+                fail(f"{key}: block boundary not pinned (no "
+                     f"optimization_barrier in block_tail)")
+        return v

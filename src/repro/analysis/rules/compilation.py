@@ -1,0 +1,62 @@
+"""single-compilation: the serving steps trace to one static graph.
+
+Pins PR 3/4's "compiles exactly once" promise from the static side:
+the slot step and the chunk-prefill step must be retrace-stable (two
+traces at the same avals produce the identical jaxpr — a trace-time
+dependence on Python state would recompile per request) and their
+invars must be strongly typed at the expected static shapes
+(``weak_type`` avals come from bare Python scalars leaking into the
+step's arguments; a weak->strong flip later is a silent recompile).
+The dynamic side of the same promise is pinned by the jit cache-miss
+counting test (tests/test_compile_count.py).
+"""
+from __future__ import annotations
+
+
+from repro.analysis.report import Violation
+
+
+class SingleCompilation:
+    name = "single-compilation"
+
+    def check(self, g, idx) -> list[Violation]:
+        if g.kind == "micro":
+            return []
+        v: list[Violation] = []
+
+        for i, var in enumerate(g.closed.jaxpr.invars):
+            if getattr(var.aval, "weak_type", False):
+                label = (g.invar_labels[i]
+                         if i < len(g.invar_labels) else f"invar{i}")
+                v.append(Violation(
+                    self.name, g.name,
+                    f"invar {label} is weakly typed — a Python scalar "
+                    f"leaked into the step; its strong-typed twin would "
+                    f"trigger a recompile"))
+
+        retrace = g.meta.get("retrace_text")
+        if retrace is not None and retrace != str(g.closed.jaxpr):
+            v.append(Violation(
+                self.name, g.name,
+                "retracing at identical avals produced a different "
+                "jaxpr — the step depends on mutable Python state and "
+                "will recompile per request"))
+
+        tok_label = g.meta.get("token_label")
+        want = g.meta.get("expected_token_shape")
+        if tok_label is not None and want is not None:
+            tok_idx = sorted(idx.invars_matching(rf"^{tok_label}$"))
+            if len(tok_idx) != 1:
+                v.append(Violation(
+                    self.name, g.name,
+                    f"expected exactly one {tok_label} invar, found "
+                    f"{len(tok_idx)}"))
+            else:
+                got = tuple(g.closed.jaxpr.invars[tok_idx[0]].aval.shape)
+                if got != tuple(want):
+                    v.append(Violation(
+                        self.name, g.name,
+                        f"{tok_label} traced at shape {got}, expected "
+                        f"the static step shape {tuple(want)} — shapes "
+                        f"per request means compiles per request"))
+        return v

@@ -1,0 +1,47 @@
+"""donation: decode-carry buffers declared donated ARE donated.
+
+Pins the paged-KV memory story from PR 4: the slot step, chunk-prefill
+step and fused-scan decode all declare their state tree donated
+(``donate_argnums``), so the per-token KV writes update in place
+instead of copying the whole cache every step.  Donation fails
+*silently* — a shape/dtype mismatch between a donated input and every
+output just drops the aliasing and doubles peak memory — so the rule
+reads the donation attributes out of the lowered MLIR (donation is
+only decided at lowering) and counts them against the number of
+donated state leaves.
+
+Two attribute forms are both healthy:
+
+  * ``tf.aliasing_output`` — the alias was proven at lowering (the
+    single-device graphs);
+  * ``jax.buffer_donor`` — multi-device lowering defers the concrete
+    alias to the compiler after sharding propagation, but the buffer
+    is marked donatable (the tp>1 graphs).
+
+What the rule rejects is donated leaves that carry *neither* mark —
+the donation was dropped before reaching XLA.
+"""
+from __future__ import annotations
+
+
+from repro.analysis.report import Violation
+
+
+class Donation:
+    name = "donation"
+
+    def check(self, g, idx) -> list[Violation]:
+        expected = g.meta.get("expected_donated")
+        text = g.meta.get("lowered_text")
+        if expected is None or text is None:
+            return []
+        aliased = text.count("tf.aliasing_output")
+        donor = text.count("jax.buffer_donor")
+        if aliased + donor != expected:
+            return [Violation(
+                self.name, g.name,
+                f"{aliased} aliased + {donor} donor-marked input "
+                f"buffers in the lowered computation, expected "
+                f"{expected} (one per donated state leaf) — the decode "
+                f"carry is being copied, not updated in place")]
+        return []

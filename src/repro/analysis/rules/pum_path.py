@@ -1,0 +1,51 @@
+"""pum-path: no float op between bit-plane slicing and recombination.
+
+Pins the paper's bit-exact integer PUM semantics (and Proteus's
+precision-discipline argument): the value of a bit-sliced MVM is only
+exactly reconstructible if every partial product and shift-and-add in
+the plane domain is integer arithmetic — one f32/bf16 hop re-rounds
+partial products and the recombined value stops equalling the int
+contraction.  The slicing/recombination dataflow lives in the
+``bitplanes`` scopes of ``core.bitslice``; the rule requires every
+equation there to produce integer/bool values only.
+
+Coverage note: the *packed* serving fast path contracts against the
+recombined int8 weight (planes are sliced at prepack time, off-graph),
+so this rule bites on the no-prepack pum cell and the micro bit-slice
+graphs — ``graphs.build_grid`` includes both, and their metadata
+demands the region exists (``expects_bitplanes``) so silently losing
+the scope is itself a violation.
+"""
+from __future__ import annotations
+
+
+import jax.numpy as jnp
+
+from repro.analysis.report import Violation
+
+
+class PumPath:
+    name = "pum-path"
+
+    def check(self, g, idx) -> list[Violation]:
+        if g.mode != "pum":
+            return []
+        v: list[Violation] = []
+        recs = idx.in_scope("bitplanes")
+        if g.meta.get("expects_bitplanes") and not recs:
+            v.append(Violation(
+                self.name, g.name,
+                "no bitplanes region found in a graph that must slice "
+                "and recombine in-graph"))
+        for r in recs:
+            for ov in r.eqn.outvars:
+                aval = getattr(ov, "aval", None)
+                dt = getattr(aval, "dtype", None)
+                if dt is not None and jnp.issubdtype(dt, jnp.floating):
+                    v.append(Violation(
+                        self.name, g.name,
+                        f"{r.prim} at {'/'.join(r.stack)} produces {dt} "
+                        f"inside the bit-plane domain — partial products "
+                        f"must stay integer between slicing and "
+                        f"recombination"))
+        return v

@@ -1,0 +1,108 @@
+"""masked-scatter: every write into shared decode state is routed or
+masked by the active-slot machinery.
+
+Pins PR 4's bug class: the slot-wise decode step runs *every* row —
+empty, retired, or still mid-prefill — so an unmasked KV-pool scatter
+lets a dead row scribble over blocks another slot owns (or a streaming
+prefill is filling), and an unmasked recurrent-state update moves a
+mid-prefill row's state under it.  Three checks:
+
+  * every scatter whose operand is the paged KV pool sits inside the
+    ``kv_pool_write`` scope and its *scatter indices* statically depend
+    on both the block table AND the active mask (the in-step
+    ``_mask_block_table`` multiply zeroes dead rows' tables, routing
+    their writes to the reserved trash block);
+  * families with recurrent state carry a ``freeze_inactive`` select
+    whose predicate depends on the active mask;
+  * contiguous KV-cache writes sit in ``kv_cache_write`` with indices
+    derived from the per-slot ``cache_index`` vector (each row writes
+    at its own depth — never at another row's).
+"""
+from __future__ import annotations
+
+
+from repro.analysis.report import Violation
+
+_WRITE_PRIMS = ("scatter", "dynamic_update_slice")
+
+
+def _index_deps(r) -> Frozenset[int]:
+    """Deps of the operands that *address* the write (not the payload)."""
+    if r.prim == "scatter":
+        return r.in_deps[1]                 # (operand, indices, updates)
+    if r.prim == "dynamic_update_slice":    # (operand, update, *starts)
+        out: Frozenset[int] = frozenset()
+        for d in r.in_deps[2:]:
+            out = out | d
+        return out
+    out = frozenset()
+    for d in r.in_deps[1:]:
+        out = out | d
+    return out
+
+
+class MaskedScatter:
+    name = "masked-scatter"
+
+    def check(self, g, idx) -> list[Violation]:
+        if g.kind != "decode":
+            return []
+        v: list[Violation] = []
+
+        def fail(msg):
+            v.append(Violation(self.name, g.name, msg))
+
+        active = idx.invars_matching(r"^active")
+
+        if g.layout == "paged" and g.meta.get("has_kv"):
+            pool = idx.invars_matching(r"\['[kv]_pool'\]")
+            table = idx.invars_matching(r"^block_table")
+            writes = [r for r in idx.records
+                      if r.prim in _WRITE_PRIMS and r.in_deps
+                      and (r.in_deps[0] & pool)]
+            if not writes:
+                fail("no KV-pool scatters found — either the pool write "
+                     "moved out of the traced step or provenance "
+                     "tracking broke")
+            for r in writes:
+                where = "/".join(r.stack) or "<top>"
+                if "kv_pool_write" not in r.stack:
+                    fail(f"pool write at {where}: outside the "
+                         f"kv_pool_write scope")
+                deps = _index_deps(r)
+                if not (deps & table):
+                    fail(f"pool write at {where}: scatter indices do not "
+                         f"derive from the block table")
+                if not (deps & active):
+                    fail(f"pool write at {where}: scatter indices do not "
+                         f"depend on the active mask — inactive rows' "
+                         f"writes are not routed to the trash block")
+
+        if g.layout == "paged" and g.meta.get("has_recurrent"):
+            freezes = [r for r in idx.in_scope("freeze_inactive")
+                       if r.prim == "select_n"]
+            if not freezes:
+                fail("family has recurrent state but no freeze_inactive "
+                     "select in the decode step — mid-prefill rows' "
+                     "states would move under them")
+            elif not any(r.in_deps[0] & active for r in freezes):
+                fail("freeze_inactive selects exist but none predicate "
+                     "on the active mask")
+
+        if g.layout == "contiguous" and g.meta.get("has_kv"):
+            kv = idx.invars_matching(r"\['k'\]|\['v'\]")
+            cache_index = idx.invars_matching(r"^cache_index")
+            writes = [r for r in idx.records
+                      if r.prim in _WRITE_PRIMS and r.in_deps
+                      and (r.in_deps[0] & kv)]
+            if not writes:
+                fail("no contiguous KV-cache writes found")
+            for r in writes:
+                where = "/".join(r.stack) or "<top>"
+                if "kv_cache_write" not in r.stack:
+                    fail(f"KV write at {where}: outside the "
+                         f"kv_cache_write scope")
+                if not (_index_deps(r) & cache_index):
+                    fail(f"KV write at {where}: indices do not derive "
+                         f"from the per-slot cache_index")
+        return v

@@ -23,7 +23,6 @@ Key expansion implemented for AES-128/192/256 (10/12/14 rounds).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +52,7 @@ def _gmul(a: int, b: int) -> int:
     return p
 
 
-def _build_sbox() -> Tuple[np.ndarray, np.ndarray]:
+def _build_sbox() -> tuple[np.ndarray, np.ndarray]:
     # multiplicative inverse in GF(2^8) + affine transform (FIPS-197 §5.1.1)
     inv = np.zeros(256, np.uint8)
     for x in range(1, 256):
@@ -120,7 +119,7 @@ def _bits_to_bytes(bits: np.ndarray) -> np.ndarray:
 
 
 @functools.lru_cache(maxsize=None)
-def _linear_matrices() -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+def _linear_matrices() -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Build the 128x128 GF(2) matrices by probing basis vectors:
        M_LIN     = MixColumns ∘ ShiftRows   (encrypt rounds 1..9)
        M_SHIFT   = ShiftRows                (final round)
@@ -290,7 +289,7 @@ def aes_decrypt(ct, key, *, use_kernel: bool = False) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def aes_encrypt_dce(pt: np.ndarray, key: np.ndarray,
-                    ctr: Optional[digital.GateCounter] = None) -> np.ndarray:
+                    ctr: digital.GateCounter | None = None) -> np.ndarray:
     """Every step through the DCE bit-plane simulator (rows = bytes of a
     batch of states; one vector register holds the whole batch's byte i).
     Demonstrates full in-memory execution + gate accounting; MixColumns

@@ -14,7 +14,7 @@ per the mapping; ``pum.ibert=True`` turns on the integer nonlinearities.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,7 @@ from repro.config import PUMConfig
 from repro.core import ibert
 from repro.core.pum_linear import pum_linear
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 
 def _init_linear(key, k, n, scale=None):

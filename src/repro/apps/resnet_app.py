@@ -9,7 +9,6 @@ degradation beyond) without the dataset.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +17,7 @@ from repro.config import ADCConfig, NoiseConfig, PUMConfig
 from repro.models import resnet
 
 
-def synthetic_images(key, n: int, classes: int = 10) -> Tuple[jax.Array,
+def synthetic_images(key, n: int, classes: int = 10) -> tuple[jax.Array,
                                                               jax.Array]:
     """Class-conditional Gaussian blobs over 32x32x3 (deterministic)."""
     k1, k2 = jax.random.split(key)

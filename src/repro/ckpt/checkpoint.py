@@ -24,13 +24,13 @@ from __future__ import annotations
 import json
 import os
 import shutil
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import numpy as np
 
 
-def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
+def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
     out = {}
     if isinstance(tree, dict):
         for k in sorted(tree.keys()):
@@ -43,7 +43,7 @@ def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
     return out
 
 
-def _unflatten_into(template: Any, flat: Dict[str, Any], prefix: str = ""):
+def _unflatten_into(template: Any, flat: dict[str, Any], prefix: str = ""):
     if isinstance(template, dict):
         return {k: _unflatten_into(v, flat, f"{prefix}.{k}" if prefix else k)
                 for k, v in template.items()}
@@ -80,7 +80,7 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None
     steps = [int(d.split("_")[1]) for d in os.listdir(directory)
@@ -88,8 +88,8 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def load_checkpoint(directory: str, template: Any, step: Optional[int] = None,
-                    shardings: Any = None) -> Tuple[Any, int]:
+def load_checkpoint(directory: str, template: Any, step: int | None = None,
+                    shardings: Any = None) -> tuple[Any, int]:
     """Restore into ``template``'s structure; if ``shardings`` (a matching
     pytree of NamedShardings) is given, leaves are placed sharded — this is
     the elastic-restore path (works for any mesh topology)."""
@@ -124,7 +124,7 @@ class CheckpointManager:
         return path
 
     def restore(self, template: Any, shardings: Any = None,
-                ) -> Optional[Tuple[Any, int]]:
+                ) -> tuple[Any, int] | None:
         if latest_step(self.directory) is None:
             return None
         return load_checkpoint(self.directory, template,

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Tuple
 
 
 # ---------------------------------------------------------------------------
@@ -186,8 +185,8 @@ SHAPES = {
 
 @dataclass(frozen=True)
 class MeshConfig:
-    shape: Tuple[int, ...] = (16, 16)
-    axes: Tuple[str, ...] = ("data", "model")
+    shape: tuple[int, ...] = (16, 16)
+    axes: tuple[str, ...] = ("data", "model")
     # how the pod axis is used when present: "data" (DP across pods) or
     # "pipeline" (2-stage PP)
     pod_role: str = "data"
@@ -200,7 +199,7 @@ class MeshConfig:
         return n
 
     @property
-    def data_axes(self) -> Tuple[str, ...]:
+    def data_axes(self) -> tuple[str, ...]:
         """Axes gradients are reduced over (pod acts as extra DP by default)."""
         out = []
         if "pod" in self.axes and self.pod_role == "data":

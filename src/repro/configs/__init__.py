@@ -5,7 +5,6 @@ own workloads).  ``get(name)`` returns the full published config;
 from __future__ import annotations
 
 import importlib
-from typing import Callable, Dict
 
 from repro.config import ModelConfig
 

@@ -18,7 +18,6 @@ The *performance* path (deployment) is ``kernels/bitslice_mvm``.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +85,7 @@ def _ir_drop(i_line: jax.Array, alpha: float) -> jax.Array:
 def crossbar_mvm(x_q: jax.Array, w_q: jax.Array, *, weight_bits: int,
                  bits_per_slice: int, input_bits: int,
                  adc: ADCConfig, noise: NoiseConfig,
-                 key: Optional[jax.Array] = None,
+                 key: jax.Array | None = None,
                  signed_inputs: bool = True) -> jax.Array:
     """Full ACE simulation of ``y = x_q @ w_q`` (integer operands).
 
@@ -165,7 +164,7 @@ def crossbar_mvm(x_q: jax.Array, w_q: jax.Array, *, weight_bits: int,
 
 def compensated_binary_mvm(x_bits: jax.Array, w_bits: jax.Array, *,
                            noise: NoiseConfig, adc: ADCConfig,
-                           key: Optional[jax.Array] = None) -> jax.Array:
+                           key: jax.Array | None = None) -> jax.Array:
     """MVM of a strictly-positive binary matrix with the remapping scheme.
 
     Naive mapping stores w in {0,1} on the positive rail only -> large
@@ -206,7 +205,7 @@ def compensated_binary_mvm(x_bits: jax.Array, w_bits: jax.Array, *,
 
 def naive_binary_mvm(x_bits: jax.Array, w_bits: jax.Array, *,
                      noise: NoiseConfig, adc: ADCConfig,
-                     key: Optional[jax.Array] = None) -> jax.Array:
+                     key: jax.Array | None = None) -> jax.Array:
     """The uncompensated mapping (w on the positive rail in {0,1}) — used by
     tests/benchmarks to show the compensation scheme's benefit."""
     if key is None:

@@ -14,7 +14,6 @@ noise / ADC simulation wraps these primitives in ``repro.core.analog``.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,7 @@ import numpy as np
 # ---------------------------------------------------------------------------
 
 def quantize_symmetric(x: jax.Array, bits: int, axis=None,
-                       ) -> Tuple[jax.Array, jax.Array]:
+                       ) -> tuple[jax.Array, jax.Array]:
     """Symmetric linear quantisation to ``bits`` (one bit for sign).
 
     Returns (q, scale) with ``q`` int32 in [-(2^(b-1)-1), 2^(b-1)-1] and
@@ -50,7 +49,7 @@ def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
 # the sign lives in which array of the pair holds the value)
 # ---------------------------------------------------------------------------
 
-def split_differential(q: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def split_differential(q: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Signed int -> (positive array, negative array), both >= 0.
 
     Models differential cell pairs: G+ holds max(q,0), G- holds max(-q,0);
@@ -82,11 +81,12 @@ def slice_planes_signed(q: jax.Array, weight_bits: int,
     Pallas kernel consumes (pos/neg separated only matters for the noise
     sim, which uses :func:`split_differential` + :func:`slice_planes_unsigned`).
     """
-    pos, neg = split_differential(q)
-    mag_bits = weight_bits - 1                 # sign carried by the pair
-    p = slice_planes_unsigned(pos, mag_bits, bits_per_slice)
-    n = slice_planes_unsigned(neg, mag_bits, bits_per_slice)
-    return (p - n).astype(jnp.int32)
+    with jax.named_scope("bitplanes"):
+        pos, neg = split_differential(q)
+        mag_bits = weight_bits - 1             # sign carried by the pair
+        p = slice_planes_unsigned(pos, mag_bits, bits_per_slice)
+        n = slice_planes_unsigned(neg, mag_bits, bits_per_slice)
+        return (p - n).astype(jnp.int32)
 
 
 def combine_planes(partials: jax.Array, bits_per_slice: int) -> jax.Array:
@@ -97,11 +97,12 @@ def combine_planes(partials: jax.Array, bits_per_slice: int) -> jax.Array:
     DARTH-PUM hardware, performed by shift units during ACE->DCE transfer
     plus pipelined DCE adds.)
     """
-    n_slices = partials.shape[0]
-    shifts = (jnp.arange(n_slices, dtype=jnp.int32) * bits_per_slice)
-    weights = (jnp.int32(1) << shifts).reshape(
-        (n_slices,) + (1,) * (partials.ndim - 1))
-    return jnp.sum(partials * weights, axis=0)
+    with jax.named_scope("bitplanes"):
+        n_slices = partials.shape[0]
+        shifts = (jnp.arange(n_slices, dtype=jnp.int32) * bits_per_slice)
+        weights = (jnp.int32(1) << shifts).reshape(
+            (n_slices,) + (1,) * (partials.ndim - 1))
+        return jnp.sum(partials * weights, axis=0)
 
 
 # ---------------------------------------------------------------------------
@@ -110,7 +111,7 @@ def combine_planes(partials: jax.Array, bits_per_slice: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def slice_bits_input(x: jax.Array, bits: int, signed: bool = True,
-                     ) -> Tuple[jax.Array, np.ndarray]:
+                     ) -> tuple[jax.Array, np.ndarray]:
     """Int input -> binary planes + per-plane signed weights.
 
     Returns (planes [bits, *x.shape] in {0,1} int32, weights [bits]) such
@@ -174,7 +175,8 @@ def bitsliced_matmul_planes(x_q: jax.Array, planes: jax.Array,
         return jnp.matmul(x_q.astype(jnp.int32), p.astype(jnp.int32),
                           preferred_element_type=jnp.int32)
 
-    partials = jax.vmap(one_plane)(planes)                          # [S,...,N]
+    with jax.named_scope("bitplanes"):
+        partials = jax.vmap(one_plane)(planes)                      # [S,...,N]
     return combine_planes(partials, bits_per_slice)
 
 

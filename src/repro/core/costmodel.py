@@ -24,7 +24,6 @@ across all workloads (no per-figure tuning).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
 
 
 from repro.core import digital, isa
@@ -111,7 +110,7 @@ class Result:
     latency_s: float          # one item (block / image / sequence)
     throughput: float         # items/s, chip/system level (iso-area)
     energy_j: float           # per item
-    detail: Dict[str, float] = field(default_factory=dict)
+    detail: dict[str, float] = field(default_factory=dict)
 
     def speedup_over(self, other: "Result") -> float:
         return self.throughput / other.throughput
@@ -147,7 +146,7 @@ class MVMShape:
         return float(self.rows) * self.k * self.n
 
 
-def resnet20_layers() -> List[Tuple[str, MVMShape, int]]:
+def resnet20_layers() -> list[tuple[str, MVMShape, int]]:
     """(name, im2col MVM, output elements) for ResNet-20 @ CIFAR-10."""
     layers = []
     spec = [("conv1", 3, 16, 32)] \
@@ -178,7 +177,7 @@ class EncoderWorkload:
     seq: int = 128
     heads: int = 12
 
-    def static_mvms(self) -> List[MVMShape]:
+    def static_mvms(self) -> list[MVMShape]:
         d, f, s = self.d_model, self.d_ff, self.seq
         return [MVMShape(d, 3 * d, rows=s), MVMShape(d, d, rows=s),
                 MVMShape(d, f, rows=s), MVMShape(f, d, rows=s)]
@@ -281,7 +280,7 @@ class DarthPUM:
         layer_hcts = {}
         layer_conv = {}
         layer_dce = {}
-        for name, m, out_elems in resnet20_layers():
+        for name, m, _out_elems in resnet20_layers():
             c = m.conversions(bits_per_cell)
             # shift-and-add recombination + bias/relu in the DCE
             adds = m.input_bits * m.n_slices(bits_per_cell)

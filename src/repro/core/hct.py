@@ -18,7 +18,6 @@ per §5.1), and what the iso-area benchmarks sweep.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,11 +47,11 @@ class VACore:
 @dataclass
 class MatrixHandle:
     """Result of setMatrix(): where a logical matrix lives."""
-    shape: Tuple[int, int]
+    shape: tuple[int, int]
     tiles_k: int
     tiles_n: int
-    vacores: List[VACore]
-    hcts: List[int]
+    vacores: list[VACore]
+    hcts: list[int]
     w_q: jax.Array              # quantised int weights (functional sim)
     scale: jax.Array
     analog_mode: bool = True
@@ -64,8 +63,8 @@ class DarthPUMDevice:
     n_hcts: int = 1860                       # iso-area, SAR (paper §6)
     adc: ADCConfig = field(default_factory=ADCConfig)
     noise: NoiseConfig = field(default_factory=NoiseConfig)
-    _free_arrays: Dict[int, int] = field(default_factory=dict)
-    _matrices: List[MatrixHandle] = field(default_factory=list)
+    _free_arrays: dict[int, int] = field(default_factory=dict)
+    _matrices: list[MatrixHandle] = field(default_factory=list)
 
     def __post_init__(self):
         if not self._free_arrays:
@@ -110,7 +109,7 @@ class DarthPUMDevice:
 
     def execMVM(self, handle: MatrixHandle, x: jax.Array, *,
                 input_bits: int = 8,
-                key: Optional[jax.Array] = None) -> jax.Array:
+                key: jax.Array | None = None) -> jax.Array:
         """Execute MVM against a stored matrix through the ACE simulation
         (or the DCE integer path if analog mode is disabled)."""
         bpc = handle.vacores[0].bits_per_slice

@@ -13,7 +13,7 @@ Approximation-error bounds are asserted in tests/test_ibert.py.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,7 @@ def quantize(x: jax.Array, bits: int = 8, axis=None) -> QTensor:
 # ---------------------------------------------------------------------------
 
 def i_poly(q: jax.Array, s: jax.Array, a: float, b: float, c: float,
-           ) -> Tuple[jax.Array, jax.Array]:
+           ) -> tuple[jax.Array, jax.Array]:
     """Evaluate a(x+b)^2 + c on integer codes: all arithmetic on int32."""
     qb = jnp.floor(b / s).astype(jnp.int32)
     qc = jnp.floor(c / (a * s * s)).astype(jnp.int32)
@@ -57,7 +57,7 @@ def i_poly(q: jax.Array, s: jax.Array, a: float, b: float, c: float,
 _ERF_A, _ERF_B, _ERF_C = -0.2888, -1.769, 1.0
 
 
-def i_erf(q: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def i_erf(q: jax.Array, s: jax.Array) -> tuple[jax.Array, jax.Array]:
     sgn = jnp.sign(q)
     qa = jnp.abs(q)
     qa = jnp.minimum(qa, jnp.floor(-_ERF_B / s).astype(jnp.int32))
@@ -65,7 +65,7 @@ def i_erf(q: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return sgn * ql, sl
 
 
-def i_gelu(q: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def i_gelu(q: jax.Array, s: jax.Array) -> tuple[jax.Array, jax.Array]:
     """GELU(x) = x * 0.5 * (1 + erf(x / sqrt(2))) with integer erf."""
     qe, se = i_erf(q, s / jnp.sqrt(2.0).astype(jnp.float32))
     one = jnp.floor(1.0 / se).astype(jnp.int32)
@@ -89,7 +89,7 @@ _EXP_A, _EXP_B, _EXP_C = 0.3585, 1.353, 0.344
 _LN2 = 0.6931471805599453
 
 
-def i_exp(q: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def i_exp(q: jax.Array, s: jax.Array) -> tuple[jax.Array, jax.Array]:
     """exp(x) for x <= 0 via range reduction x = -z ln2 + p, p in (-ln2, 0]."""
     q_ln2 = jnp.floor(_LN2 / s).astype(jnp.int32)
     q_ln2 = jnp.maximum(q_ln2, 1)
@@ -103,7 +103,7 @@ def i_exp(q: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 def i_softmax(q: jax.Array, s: jax.Array, axis: int = -1,
-              out_bits: int = 15) -> Tuple[jax.Array, jax.Array]:
+              out_bits: int = 15) -> tuple[jax.Array, jax.Array]:
     """Integer softmax: subtract max, i_exp, integer-divide by the sum."""
     qm = jnp.max(q, axis=axis, keepdims=True)
     qe, se = i_exp(q - qm, s)
@@ -143,7 +143,7 @@ def i_sqrt(n: jax.Array, iters: int = 6) -> jax.Array:
 
 
 def i_layernorm(q: jax.Array, s: jax.Array, axis: int = -1,
-                ) -> Tuple[jax.Array, jax.Array]:
+                ) -> tuple[jax.Array, jax.Array]:
     """LayerNorm on integer codes: (q - mean) / sqrt(var) with i_sqrt.
 
     Output scale is 1/2^OUT for a fixed OUT-bit fraction.

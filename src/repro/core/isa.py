@@ -23,7 +23,7 @@ Primitive µops (latencies in cycles @ 1 GHz, paper Table 2 + §4):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Literal, Tuple
+from typing import Literal
 
 SAR_LINES_PER_CYCLE = 2          # 2 SAR ADCs per HCT, 1 conversion/cycle
 RAMP_CYCLES = 256
@@ -128,8 +128,8 @@ _DIGITAL_LAT = {"DADD": add_cycles(16), "DXOR": 5, "DSHL": 1, "DSHR": 1,
                 "TRANSPOSE": ARRAY_DIM}
 
 
-def arbitrate(stream: List[Instr], *, input_bits: int = 8, n_slices: int = 4,
-              adc_kind: str = "sar", iiu: bool = True) -> Tuple[int, int]:
+def arbitrate(stream: list[Instr], *, input_bits: int = 8, n_slices: int = 4,
+              adc_kind: str = "sar", iiu: bool = True) -> tuple[int, int]:
     """Execute the arbiter's serialisation rule over an instruction stream.
 
     Analog instructions appear atomic (paper §4.2): a younger digital

@@ -30,7 +30,7 @@ unstacked weight would have.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +54,7 @@ class PackedLinear:
     scale  — f32 dequantisation scale: ``[..., 1, 1]`` per-tensor (pum) or
              ``[..., 1, N]`` per-out-channel (int8).
     """
-    planes: Optional[jax.Array]
+    planes: jax.Array | None
     wq: jax.Array
     scale: jax.Array
     mode: str = "pum"
@@ -74,7 +74,7 @@ class PackedLinear:
 
     # -- array-like surface so shape probes on params keep working --------
     @property
-    def shape(self) -> Tuple[int, ...]:
+    def shape(self) -> tuple[int, ...]:
         return self.wq.shape
 
     @property

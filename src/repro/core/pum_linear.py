@@ -38,7 +38,7 @@ order bit-for-bit.
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+import itertools
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +47,18 @@ from repro.config import PUMConfig
 from repro.core import analog, bitslice
 from repro.core.prepack import PackedLinear
 from repro.dist.sharding import tp_replicate
+
+# Module-level alias so the graph auditor's mutation self-tests can
+# knock out *this file's* rounding pins (and only these) to prove the
+# barrier-coverage rule fires (analysis/mutations.py).
+_barrier = jax.lax.optimization_barrier
+
+# Trace-order counter giving every pum_linear call site a unique
+# ``named_scope`` instance (``pum_linear<N>``): the auditor counts and
+# checks barrier coverage *per MVM*, and adjacent calls must not merge
+# into one scope.  Name stacks never enter jit cache keys or jaxpr
+# text, so the counter cannot perturb compilation.
+_MVM_SCOPE_IDS = itertools.count()
 
 
 # ---------------------------------------------------------------------------
@@ -106,16 +118,30 @@ def _quantize_act(x, bits: int):
     the other — so gating it per-mode would let the two graphs quantise
     different values.
     """
-    x = jax.lax.optimization_barrier(x)
-    return bitslice.quantize_symmetric(x.astype(jnp.float32), bits,
-                                       axis=x.ndim - 1)
+    with jax.named_scope("qact"):
+        x = _barrier(x)
+        return bitslice.quantize_symmetric(x.astype(jnp.float32), bits,
+                                           axis=x.ndim - 1)
+
+
+def _close_accumulator(acc):
+    """The psum-style reduction closing a row-sharded quantised MVM:
+    K-split shards' partial accumulators are exact integers, so the
+    all-reduce is bitwise-identical to the single-tile contraction.
+    Scoped so the auditor's integer-accumulator rule can find (and
+    dtype-check) every closing constraint."""
+    with jax.named_scope("tp_accum"):
+        return tp_replicate(acc)
 
 
 def _matmul_bf16(x, w):
     # TP serving: float contractions must keep full K local (reduction
     # order = bits); gather the operand and the N-sharded product
-    x = tp_replicate(x)
-    return tp_replicate(jnp.matmul(x, w.astype(x.dtype)))
+    with jax.named_scope("tp_gather"):
+        x = tp_replicate(x)
+    y = jnp.matmul(x, w.astype(x.dtype))
+    with jax.named_scope("tp_gather"):
+        return tp_replicate(y)
 
 
 def _matmul_int8(x, w):
@@ -126,12 +152,12 @@ def _matmul_int8(x, w):
         xq.astype(jnp.int8), wq.astype(jnp.int8),
         dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
-    acc = tp_replicate(acc)            # inter-tile psum: int32 partials
+    acc = _close_accumulator(acc)      # inter-tile psum: int32 partials
     y = acc.astype(jnp.float32) * (xs * ws)
     return y.astype(x.dtype)
 
 
-def _matmul_pum(x, w, cfg: PUMConfig, key: Optional[jax.Array]):
+def _matmul_pum(x, w, cfg: PUMConfig, key: jax.Array | None):
     """Bit-sliced path. Exact (kernel/oracle) unless noise is enabled, in
     which case the ACE fidelity sim (ADC + parasitics) runs."""
     xq, xs = _quantize_act(x, cfg.input_bits)
@@ -151,7 +177,7 @@ def _matmul_pum(x, w, cfg: PUMConfig, key: Optional[jax.Array]):
     else:
         acc = bitslice.bitsliced_matmul_exact(
             xq, wq, cfg.weight_bits, cfg.bits_per_slice)
-    acc = tp_replicate(acc)            # inter-tile psum: integer partials
+    acc = _close_accumulator(acc)      # inter-tile psum: integer partials
     y = acc.astype(jnp.float32) * (xs * ws)
     return y.astype(x.dtype)
 
@@ -164,16 +190,13 @@ def _matmul_pum(x, w, cfg: PUMConfig, key: Optional[jax.Array]):
 def _matmul_int8_packed(x, w: PackedLinear):
     xq, xs = _quantize_act(x, 8)
     acc = bitslice.int_matmul(xq, w.wq)
-    # the psum-style reduction closing a row-sharded serving MVM: the
-    # K-split shards' partial accumulators are exact integers, so the
-    # all-reduce here is bitwise-identical to the single-tile contraction
-    acc = tp_replicate(acc)
+    acc = _close_accumulator(acc)
     y = acc.astype(jnp.float32) * (xs * w.scale)
     return y.astype(x.dtype)
 
 
 def _matmul_pum_packed(x, w: PackedLinear, cfg: PUMConfig,
-                       key: Optional[jax.Array]):
+                       key: jax.Array | None):
     xq, xs = _quantize_act(x, cfg.input_bits)
     x_bound = (1 << (cfg.input_bits - 1)) - 1
     w_bound = (1 << (w.weight_bits - 1)) - 1
@@ -193,15 +216,15 @@ def _matmul_pum_packed(x, w: PackedLinear, cfg: PUMConfig,
         # runs against the recombined int8 weight in one MXU-friendly dot
         acc = bitslice.int_matmul(xq, w.wq, x_bound=x_bound,
                                   w_bound=w_bound)
-    acc = tp_replicate(acc)            # inter-tile psum: integer partials
+    acc = _close_accumulator(acc)      # inter-tile psum: integer partials
     y = acc.astype(jnp.float32) * (xs * w.scale)
     return y.astype(x.dtype)
 
 
-def pum_linear(x: jax.Array, w: Union[jax.Array, PackedLinear],
+def pum_linear(x: jax.Array, w: jax.Array | PackedLinear,
                cfg: PUMConfig,
-               bias: Optional[jax.Array] = None,
-               key: Optional[jax.Array] = None) -> jax.Array:
+               bias: jax.Array | None = None,
+               key: jax.Array | None = None) -> jax.Array:
     """y = x @ w (+ bias) under the configured execution mode.
 
     x: [..., K]; w: [K, N] float param, or a :class:`PackedLinear`
@@ -215,34 +238,37 @@ def pum_linear(x: jax.Array, w: Union[jax.Array, PackedLinear],
             "pum_linear expects a per-layer PackedLinear [K, N]; stacked "
             f"packs must be indexed/scanned first (got shape {w.shape})")
         assert cfg.mode == w.mode, (cfg.mode, w.mode)
-    if cfg.mode == "bf16":
-        assert not packed, "bf16 mode has no packed representation"
-        if cfg.inference:
-            # serving: materialise the bf16 operand at the MVM boundary
-            # so the f32 cluster rounding points — and hence the bits —
-            # cannot depend on how the surrounding graph is partitioned
-            # (single device vs tensor-parallel); the result is pinned
-            # for every mode below
-            x = jax.lax.optimization_barrier(x)
-        y = _matmul_bf16(x, w)
-    elif cfg.mode == "int8":
-        yq = _matmul_int8_packed(x, w) if packed else _matmul_int8(x, w)
-        y = yq if (packed or cfg.inference) \
-            else _ste(_matmul_bf16(x, w), yq)
-    elif cfg.mode == "pum":
-        yq = _matmul_pum_packed(x, w, cfg, key) if packed \
-            else _matmul_pum(x, w, cfg, key)
-        y = yq if (packed or cfg.inference) \
-            else _ste(_matmul_bf16(x, w), yq)
-    else:  # pragma: no cover
-        raise ValueError(cfg.mode)
-    if bias is not None:
-        # bias addition is a DCE (digital) op in the paper's mapping
-        y = y + bias.astype(y.dtype)
-    if packed or cfg.inference:
-        # serving: pin the layer output's bf16 rounding so downstream
-        # f32 consumers (cell math, norms) see the stored bits, not a
-        # pre-rounding fusion value — the other half of the bitwise
-        # single-vs-multi-device guarantee (_quantize_act pins inputs)
-        y = jax.lax.optimization_barrier(y)
+    with jax.named_scope(f"pum_linear{next(_MVM_SCOPE_IDS)}"):
+        if cfg.mode == "bf16":
+            assert not packed, "bf16 mode has no packed representation"
+            if cfg.inference:
+                # serving: materialise the bf16 operand at the MVM
+                # boundary so the f32 cluster rounding points — and hence
+                # the bits — cannot depend on how the surrounding graph
+                # is partitioned (single device vs tensor-parallel); the
+                # result is pinned for every mode below
+                with jax.named_scope("pin_in"):
+                    x = _barrier(x)
+            y = _matmul_bf16(x, w)
+        elif cfg.mode == "int8":
+            yq = _matmul_int8_packed(x, w) if packed else _matmul_int8(x, w)
+            y = yq if (packed or cfg.inference) \
+                else _ste(_matmul_bf16(x, w), yq)
+        elif cfg.mode == "pum":
+            yq = _matmul_pum_packed(x, w, cfg, key) if packed \
+                else _matmul_pum(x, w, cfg, key)
+            y = yq if (packed or cfg.inference) \
+                else _ste(_matmul_bf16(x, w), yq)
+        else:  # pragma: no cover
+            raise ValueError(cfg.mode)
+        if bias is not None:
+            # bias addition is a DCE (digital) op in the paper's mapping
+            y = y + bias.astype(y.dtype)
+        if packed or cfg.inference:
+            # serving: pin the layer output's bf16 rounding so downstream
+            # f32 consumers (cell math, norms) see the stored bits, not a
+            # pre-rounding fusion value — the other half of the bitwise
+            # single-vs-multi-device guarantee (_quantize_act pins inputs)
+            with jax.named_scope("pin_out"):
+                y = _barrier(y)
     return y

@@ -14,7 +14,7 @@ the step counter (fault-tolerance requirement).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator
+from collections.abc import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +44,7 @@ class SyntheticTokens:
     def host_batch(self) -> int:
         return self.global_batch // self.hosts
 
-    def batch(self, step: int) -> Dict[str, np.ndarray]:
+    def batch(self, step: int) -> dict[str, np.ndarray]:
         """Deterministic batch for (seed, step, host)."""
         rng = np.random.default_rng(
             (self.seed * 1_000_003 + step) * 65_537 + self.host_id)
@@ -59,7 +59,7 @@ class SyntheticTokens:
             toks[:, t] = cur
         return {"tokens": toks}
 
-    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
         step = 0
         while True:
             yield self.batch(step)
@@ -67,7 +67,7 @@ class SyntheticTokens:
 
 
 def make_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
-                     ) -> Dict[str, jax.ShapeDtypeStruct]:
+                     ) -> dict[str, jax.ShapeDtypeStruct]:
     """ShapeDtypeStruct stand-ins for every model input of a (cfg, shape)
     cell — the dry-run's input_specs() (no allocation)."""
     sds = jax.ShapeDtypeStruct

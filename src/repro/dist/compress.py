@@ -18,7 +18,7 @@ what crosses it.  Two pieces:
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -70,14 +70,14 @@ def zeros_like_residual(params: Any) -> Any:
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def _ef_leaf(g: jax.Array, r: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _ef_leaf(g: jax.Array, r: jax.Array) -> tuple[jax.Array, jax.Array]:
     corrected = g.astype(jnp.float32) + r
     scale = jnp.max(jnp.abs(corrected))
     dec = _dequantise(_quantise(corrected, scale), scale)
     return dec.astype(g.dtype), corrected - dec
 
 
-def ef_compress_grads(grads: Any, residual: Any) -> Tuple[Any, Any]:
+def ef_compress_grads(grads: Any, residual: Any) -> tuple[Any, Any]:
     """Quantise grads to int8 (per-leaf scale) with error feedback.
 
     Returns ``(decompressed_grads, new_residual)``; the caller feeds the

@@ -35,7 +35,8 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Any, Optional, Sequence, Tuple
+from collections.abc import Sequence
+from typing import Any
 
 import jax
 import numpy as np
@@ -50,7 +51,7 @@ _STATE = threading.local()
 # Active-mesh state
 # ---------------------------------------------------------------------------
 
-def current_mesh() -> Optional[Mesh]:
+def current_mesh() -> Mesh | None:
     return getattr(_STATE, "mesh", None)
 
 
@@ -113,7 +114,7 @@ def set_seq_shard(mode) -> None:
     _SEQ_MODE = mode
 
 
-def residual_spec() -> Tuple[Any, Any, Any]:
+def residual_spec() -> tuple[Any, Any, Any]:
     """shard_act axes for the [B, S, D] residual stream.
 
     Tensor-parallel serving keeps the residual replicated: decode runs
@@ -180,8 +181,11 @@ def tp_replicate(x: jax.Array) -> jax.Array:
     mesh = current_mesh()
     if mesh is None or not tp_serving():
         return x
-    return jax.lax.with_sharding_constraint(
-        x, NamedSharding(mesh, P(*([None] * x.ndim))))
+    # scoped so the graph auditor can enumerate every closing constraint
+    # (rules/accumulators.py dtype-checks the ones under ``tp_accum``)
+    with jax.named_scope("tp_replicate"):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*([None] * x.ndim))))
 
 
 # ---------------------------------------------------------------------------
@@ -206,7 +210,7 @@ def _is_row_parallel(name: str) -> bool:
     return any(name == n or name.endswith(n) for n in _ROW_PARALLEL)
 
 
-def _leaf_spec(path: Tuple[str, ...], shape: Sequence[int],
+def _leaf_spec(path: tuple[str, ...], shape: Sequence[int],
                scfg: ShardingConfig) -> P:
     fsdp = "data" if scfg.fsdp else None
     stacked = "blocks" in path
@@ -214,7 +218,7 @@ def _leaf_spec(path: Tuple[str, ...], shape: Sequence[int],
     name = _leaf_name(path)
 
     if len(core) <= 1:
-        spec: Tuple[Any, ...] = (None,) * len(core)
+        spec: tuple[Any, ...] = (None,) * len(core)
     elif name == "embed":
         spec = ("model", fsdp)
     elif name == "lm_head":
@@ -245,7 +249,7 @@ def _key_str(k) -> str:
     return str(k)
 
 
-def param_specs(params: Any, scfg: Optional[ShardingConfig] = None) -> Any:
+def param_specs(params: Any, scfg: ShardingConfig | None = None) -> Any:
     """PartitionSpec pytree for a parameter tree (arrays or ShapeDtype-
     Structs).  ``scfg`` defaults to :class:`ShardingConfig` defaults
     (FSDP on), matching the test-suite arity ``param_specs(params)``."""
@@ -306,7 +310,7 @@ def decode_state_specs(state: Any, mesh: Mesh) -> Any:
 # ---------------------------------------------------------------------------
 
 def packed_linear_specs(packed: Any, row_parallel: bool,
-                        mesh: Optional[Mesh] = None) -> Any:
+                        mesh: Mesh | None = None) -> Any:
     """PartitionSpec pytree for one :class:`PackedLinear` weight.
 
     The packed arrays shard the way the crossbar tiling would place
@@ -376,7 +380,7 @@ def serve_param_specs(params: Any) -> Any:
             return packed_linear_specs(leaf, _is_row_parallel(name), mesh)
         shape = leaf.shape
         if names and names[-1] == "lm_head" and len(shape) == 2:
-            spec: Tuple[Any, ...] = (None, "model")
+            spec: tuple[Any, ...] = (None, "model")
         elif names and names[-1] == "w" and len(shape) >= 2:
             # column-parallel: output dim over model, never K (float)
             spec = (None,) * (len(shape) - 1) + ("model",)
@@ -391,7 +395,7 @@ def serve_param_specs(params: Any) -> Any:
         is_leaf=lambda v: isinstance(v, PackedLinear))
 
 
-def serve_state_specs(states: Any, mesh: Optional[Mesh] = None) -> Any:
+def serve_state_specs(states: Any, mesh: Mesh | None = None) -> Any:
     """Specs for a serving decode-state tree (contiguous or paged KV).
 
     KV storage shards the KV-head axis over ``model`` (head-divisibility

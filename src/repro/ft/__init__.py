@@ -1,2 +1,3 @@
-from repro.ft.monitor import HeartbeatMonitor, StragglerDetector
+from repro.ft.monitor import (Counter, Gauge, HeartbeatMonitor,
+                              MetricsRegistry, StragglerDetector)
 from repro.ft.preemption import PreemptionHandler

@@ -1,4 +1,4 @@
-"""Straggler detection + heartbeat liveness.
+"""Straggler detection, heartbeat liveness, and serving/trainer metrics.
 
 At 1000+ nodes the common failure modes are (a) a host silently slowing
 down (thermal, ECC retries, network) and (b) a host dying.  Both are
@@ -12,39 +12,140 @@ detected from per-step timing reports:
     heartbeat every step; hosts silent for ``timeout_s`` are declared dead
     so the job can restart on the surviving set (elastic restart via the
     mesh-independent checkpoints).
+  * ``MetricsRegistry`` is the in-process counter/gauge sink both of the
+    above report into: monotone ``Counter``s (tokens served, restarts,
+    stragglers drained), last-value ``Gauge``s (active slots, fleet
+    slowdown), and a flat ``snapshot()`` the launcher can dump as JSON or
+    scrape into whatever telemetry exists outside this repo.
 """
 from __future__ import annotations
 
 import collections
 import os
+import threading
 import time
-from typing import List, Optional, Sequence
+from collections.abc import Sequence
+
+
+class Counter:
+    """Monotone event count.  ``inc`` rejects negative deltas — a counter
+    that can go down is a gauge, and downstream rate() math silently
+    corrupts on resets it didn't cause."""
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+
+    def inc(self, amount: int | float = 1) -> None:
+        if amount < 0:
+            raise ValueError(
+                f"counter {self.name!r} cannot decrease (inc({amount}))")
+        self._value += amount
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Gauge:
+    """Last-observed value; settable both ways."""
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+
+    def set(self, value: int | float) -> None:
+        self._value = float(value)
+
+    def add(self, amount: int | float) -> None:
+        self._value += amount
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class MetricsRegistry:
+    """Named metric registry with idempotent registration.
+
+    ``counter``/``gauge`` return the existing instrument when re-invoked
+    with the same name (call sites don't coordinate), but refuse to
+    re-register a name as a *different* kind — that is always a bug.
+    ``snapshot()`` returns a flat ``{name: value}`` dict (a plain-data
+    copy: mutating it never touches the live instruments).
+    """
+
+    def __init__(self):
+        self._metrics: dict[str, Counter | Gauge] = {}
+        self._lock = threading.Lock()
+
+    def _register(self, kind, name: str, help: str):
+        with self._lock:
+            existing = self._metrics.get(name)
+            if existing is not None:
+                if type(existing) is not kind:
+                    raise ValueError(
+                        f"metric {name!r} already registered as "
+                        f"{type(existing).__name__}, not {kind.__name__}")
+                return existing
+            m = kind(name, help)
+            self._metrics[name] = m
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._register(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._register(Gauge, name, help)
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def snapshot(self) -> dict[str, float]:
+        with self._lock:
+            return {name: m.value
+                    for name, m in sorted(self._metrics.items())}
 
 
 class StragglerDetector:
     def __init__(self, n_hosts: int, window: int = 16,
-                 threshold: float = 1.5):
+                 threshold: float = 1.5,
+                 metrics: MetricsRegistry | None = None):
         self.n_hosts = n_hosts
         self.window = window
         self.threshold = threshold
-        self._times: List[collections.deque] = [
+        self._times: list[collections.deque] = [
             collections.deque(maxlen=window) for _ in range(n_hosts)]
+        self._reports = metrics.counter(
+            "ft.step_reports", "per-host step timings received",
+        ) if metrics else None
+        self._straggler_gauge = metrics.gauge(
+            "ft.stragglers", "hosts currently over the straggler threshold",
+        ) if metrics else None
 
     def report(self, host: int, step_time_s: float):
         self._times[host].append(step_time_s)
+        if self._reports is not None:
+            self._reports.inc()
 
     def _median(self, xs: Sequence[float]) -> float:
         s = sorted(xs)
         return s[len(s) // 2]
 
-    def stragglers(self) -> List[int]:
+    def stragglers(self) -> list[int]:
         meds = [self._median(t) if t else 0.0 for t in self._times]
         live = [m for m in meds if m > 0]
-        if not live:
-            return []
-        fleet = self._median(live)
-        return [h for h, m in enumerate(meds)
-                if m > self.threshold * fleet]
+        out: list[int] = []
+        if live:
+            fleet = self._median(live)
+            out = [h for h, m in enumerate(meds)
+                   if m > self.threshold * fleet]
+        if self._straggler_gauge is not None:
+            self._straggler_gauge.set(len(out))
+        return out
 
     def slowdown(self, host: int) -> float:
         meds = [self._median(t) if t else 0.0 for t in self._times]
@@ -56,21 +157,30 @@ class StragglerDetector:
 
 class HeartbeatMonitor:
     def __init__(self, directory: str, host_id: int = 0,
-                 timeout_s: float = 60.0):
+                 timeout_s: float = 60.0,
+                 metrics: MetricsRegistry | None = None):
         self.directory = directory
         self.host_id = host_id
         self.timeout_s = timeout_s
+        self._beats = metrics.counter(
+            "ft.heartbeats", "heartbeats written by this host",
+        ) if metrics else None
+        self._dead_gauge = metrics.gauge(
+            "ft.dead_hosts", "hosts past the heartbeat timeout",
+        ) if metrics else None
         os.makedirs(directory, exist_ok=True)
 
     def _path(self, host: int) -> str:
         return os.path.join(self.directory, f"host_{host}.hb")
 
-    def beat(self, now: Optional[float] = None):
+    def beat(self, now: float | None = None):
         with open(self._path(self.host_id), "w") as f:
             f.write(str(now if now is not None else time.time()))
+        if self._beats is not None:
+            self._beats.inc()
 
     def dead_hosts(self, known_hosts: Sequence[int],
-                   now: Optional[float] = None) -> List[int]:
+                   now: float | None = None) -> list[int]:
         now = now if now is not None else time.time()
         dead = []
         for h in known_hosts:
@@ -81,4 +191,6 @@ class HeartbeatMonitor:
                     dead.append(h)
             except (FileNotFoundError, ValueError):
                 dead.append(h)
+        if self._dead_gauge is not None:
+            self._dead_gauge.set(len(dead))
         return dead

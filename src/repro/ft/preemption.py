@@ -5,6 +5,7 @@ trainer polls ``should_stop`` each step and performs a synchronous save.
 """
 from __future__ import annotations
 
+import contextlib
 import signal
 import threading
 
@@ -18,10 +19,8 @@ class PreemptionHandler:
 
     def install(self):
         for sig in (signal.SIGTERM, signal.SIGINT):
-            try:
+            with contextlib.suppress(ValueError):   # non-main thread (tests)
                 self._prev[sig] = signal.signal(sig, self._on_signal)
-            except ValueError:      # non-main thread (tests)
-                pass
 
     def _on_signal(self, signum, frame):
         self._stop.set()

@@ -30,7 +30,7 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +53,7 @@ _RESIDUAL_MODE = ""          # "" -> derived from scfg.seq_shard
 _INT8_CACHE = False
 
 
-def _skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+def _skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
     if shape.name == "long_500k" and cfg.family not in ("hybrid", "ssm"):
         return ("full-attention arch: 500k decode needs sub-quadratic "
                 "attention (DESIGN.md §Arch-applicability)")
@@ -61,7 +61,7 @@ def _skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
 
 
 def _batch_shardings(mesh, cfg: ModelConfig, shape: ShapeConfig,
-                     specs: Dict[str, jax.ShapeDtypeStruct]):
+                     specs: dict[str, jax.ShapeDtypeStruct]):
     multi = "pod" in mesh.axis_names
     dp = ("pod", "data") if multi else ("data",)
     d_size = int(np.prod([dict(zip(mesh.axis_names,
@@ -189,7 +189,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                tag: str = "base",
                tcfg: TrainConfig = TrainConfig(),
                probe: bool = True,
-               ) -> Dict[str, Any]:
+               ) -> dict[str, Any]:
     cfg = configs.get(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -260,7 +260,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     return cell
 
 
-def save_cell(cell: Dict[str, Any], out_dir: str):
+def save_cell(cell: dict[str, Any], out_dir: str):
     os.makedirs(out_dir, exist_ok=True)
     name = (f"{cell['arch']}__{cell['shape']}__{cell['mesh']}"
             f"__{cell['tag']}.json")

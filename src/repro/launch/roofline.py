@@ -21,14 +21,13 @@ from __future__ import annotations
 import dataclasses
 import re
 from dataclasses import dataclass
-from typing import Dict
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # B/s / chip
 LINK_BW = 50e9               # B/s / link
 
 
-def cost_analysis_dict(compiled) -> Dict[str, float]:
+def cost_analysis_dict(compiled) -> dict[str, float]:
     """``compiled.cost_analysis()`` returns one dict on jax >= 0.5 but a
     one-per-module list on 0.4.x; normalise to the dict."""
     ca = compiled.cost_analysis()
@@ -65,9 +64,9 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
-def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
     """Sum result-shape bytes per collective kind from post-SPMD HLO."""
-    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
     for line in hlo_text.splitlines():
         s = line.strip()
         # result instruction lines look like:
@@ -98,7 +97,7 @@ class RooflineReport:
     collective_bytes_per_device: float
     peak_memory_per_device: float
     model_flops: float            # 6*N*D (train) or 2*N_active*B (decode)
-    collective_breakdown: Dict[str, int] = dataclasses.field(
+    collective_breakdown: dict[str, int] = dataclasses.field(
         default_factory=dict)
 
     @property

@@ -7,7 +7,7 @@ projections (static weights) do.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,7 @@ from repro.core import ibert
 from repro.dist.sharding import shard_act, tp_serving
 from repro.models import layers
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 NEG_INF = -1e30
 CHUNK_Q = 1024          # online-softmax query block
@@ -169,8 +169,8 @@ def _chunked_attention(q, k, v, q_offset, softcap):
 
 def _paged_update_and_gather(cache: Params, k: jax.Array, v: jax.Array,
                              block_table: jax.Array, cache_index: jax.Array,
-                             kv_len: Optional[int],
-                             ) -> Tuple[Params, jax.Array, jax.Array,
+                             kv_len: int | None,
+                             ) -> tuple[Params, jax.Array, jax.Array,
                                         jax.Array]:
     """Scatter this step's K/V through the block table into the shared
     pool, then gather each row's logical cache view back out.
@@ -193,10 +193,11 @@ def _paged_update_and_gather(cache: Params, k: jax.Array, v: jax.Array,
     slot_col = jnp.clip(pos // bs, 0, w - 1)
     phys = jnp.take_along_axis(block_table, slot_col, axis=1)      # [B, S]
     off = pos % bs
-    k_pool = cache["k_pool"].at[phys, off].set(
-        k.astype(cache["k_pool"].dtype))
-    v_pool = cache["v_pool"].at[phys, off].set(
-        v.astype(cache["v_pool"].dtype))
+    with jax.named_scope("kv_pool_write"):
+        k_pool = cache["k_pool"].at[phys, off].set(
+            k.astype(cache["k_pool"].dtype))
+        v_pool = cache["v_pool"].at[phys, off].set(
+            v.astype(cache["v_pool"].dtype))
     # tensor-parallel serving: the pool and its gathered per-row views
     # shard the KV-head axis, so both the scatter and the block-table
     # gather stay device-local (each shard owns the whole pool for its
@@ -216,13 +217,13 @@ def _paged_update_and_gather(cache: Params, k: jax.Array, v: jax.Array,
 
 def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
               positions: jax.Array,
-              cache: Optional[Params] = None,
-              cache_index: Optional[jax.Array] = None,
-              cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache: Params | None = None,
+              cache_index: jax.Array | None = None,
+              cross_kv: tuple[jax.Array, jax.Array] | None = None,
               use_rope: bool = True,
-              block_table: Optional[jax.Array] = None,
-              kv_len: Optional[int] = None,
-              ) -> Tuple[jax.Array, Optional[Params]]:
+              block_table: jax.Array | None = None,
+              kv_len: int | None = None,
+              ) -> tuple[jax.Array, Params | None]:
     """x: [B, S, D].  Modes:
       * train/prefill (cache None, cross_kv None): causal self-attention;
         chunked online-softmax when S > 2*CHUNK_Q.
@@ -293,8 +294,9 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
             def upd(c, new):
                 return jax.lax.dynamic_update_slice_in_dim(
                     c, new.astype(c.dtype), cache_index, axis=1)
-        k_cache = upd(cache["k"], k)
-        v_cache = upd(cache["v"], v)
+        with jax.named_scope("kv_cache_write"):
+            k_cache = upd(cache["k"], k)
+            v_cache = upd(cache["v"], v)
         if tp_serving():
             # pin the serving cache's steady-state layout (KV heads over
             # model) so per-token updates never drift the sharding; the

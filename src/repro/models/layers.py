@@ -1,7 +1,7 @@
 """Shared layers: norms, RoPE, linear (PUM-routed), embeddings."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -10,11 +10,11 @@ import numpy as np
 from repro.config import ModelConfig, PUMConfig
 from repro.core.pum_linear import pum_linear
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 
 def linear_init(key, d_in: int, d_out: int, bias: bool = False,
-                scale: Optional[float] = None, dtype=jnp.float32) -> Params:
+                scale: float | None = None, dtype=jnp.float32) -> Params:
     scale = 1.0 / np.sqrt(d_in) if scale is None else scale
     p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
                * scale).astype(dtype)}
@@ -69,7 +69,7 @@ def make_norm(cfg: ModelConfig) -> Params:
 # ---------------------------------------------------------------------------
 
 def rope_tables(positions: jax.Array, head_dim: int, theta: float,
-                ) -> Tuple[jax.Array, jax.Array]:
+                ) -> tuple[jax.Array, jax.Array]:
     """positions: [...,] int -> (cos, sin) of shape [..., head_dim/2]."""
     half = head_dim // 2
     freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))

@@ -16,7 +16,7 @@ states ride through the scan as per-group stacked pytrees.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,11 @@ from repro.config import ModelConfig
 from repro.dist.sharding import shard_act, tp_replicate
 from repro.models import attention, layers, transformer
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
+
+# Per-module barrier alias: the graph auditor's mutation self-tests
+# knock out the embedding pin alone through this name.
+_barrier = jax.lax.optimization_barrier
 
 
 # ---------------------------------------------------------------------------
@@ -97,7 +101,7 @@ def prepack_for_serving(params: Params, cfg: ModelConfig) -> Params:
 # ---------------------------------------------------------------------------
 
 def init_state(cfg: ModelConfig, batch: int, max_len: int,
-               abstract: bool = False) -> List[Any]:
+               abstract: bool = False) -> list[Any]:
     """Per period-position, group-stacked decode states."""
     p_len = transformer.period(cfg)
     n_groups = cfg.num_layers // p_len
@@ -118,7 +122,7 @@ def init_state(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_paged_state(cfg: ModelConfig, batch: int, max_len: int, *,
-                     num_blocks: int, block_size: int) -> List[Any]:
+                     num_blocks: int, block_size: int) -> list[Any]:
     """Decode states with attention KV paged into one shared block pool.
 
     Attention period-positions get ``[n_groups, num_blocks + 1,
@@ -181,18 +185,18 @@ def _run_encoder(params: Params, cfg: ModelConfig,
 
 
 def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
-            states: Optional[List[Any]] = None,
-            cache_index: Optional[jax.Array] = None,
-            image_embeds: Optional[jax.Array] = None,
-            encoder_frames: Optional[jax.Array] = None,
-            encoder_out: Optional[jax.Array] = None,
+            states: list[Any] | None = None,
+            cache_index: jax.Array | None = None,
+            image_embeds: jax.Array | None = None,
+            encoder_frames: jax.Array | None = None,
+            encoder_out: jax.Array | None = None,
             remat: bool = True,
             scan_layers: bool = True,
             last_only: bool = False,
-            block_table: Optional[jax.Array] = None,
-            kv_len: Optional[int] = None,
-            ) -> Tuple[jax.Array, Optional[List[Any]],
-                       Dict[str, jax.Array]]:
+            block_table: jax.Array | None = None,
+            kv_len: int | None = None,
+            ) -> tuple[jax.Array, list[Any] | None,
+                       dict[str, jax.Array]]:
     """tokens: [B, S] int32 -> (logits, states', aux).
 
     Modes: train (states None); prefill (states = fresh init_state,
@@ -209,12 +213,13 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     [B, T, D] runs the encoder (or pass precomputed ``encoder_out``).
     """
     b, s = tokens.shape
-    h = params["embed"][tokens].astype(jnp.bfloat16 if cfg.dtype ==
-                                       "bfloat16" else jnp.float32)
-    if cfg.pum.inference:
-        # serving: pin the embedding's bf16 rounding (see the block-
-        # boundary barrier in transformer.apply_block)
-        h = jax.lax.optimization_barrier(h)
+    with jax.named_scope("embed"):
+        h = params["embed"][tokens].astype(jnp.bfloat16 if cfg.dtype ==
+                                           "bfloat16" else jnp.float32)
+        if cfg.pum.inference:
+            # serving: pin the embedding's bf16 rounding (see the block-
+            # boundary barrier in transformer.apply_block)
+            h = _barrier(h)
     if image_embeds is not None:
         img = layers.linear(params["vision_proj"],
                             image_embeds.astype(h.dtype), cfg.pum)
@@ -237,7 +242,7 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
                                    encoder_frames.astype(h.dtype))
 
     p_len = transformer.period(cfg)
-    aux_total: Dict[str, jax.Array] = {}
+    aux_total: dict[str, jax.Array] = {}
 
     def group_body(x, group_in):
         """One group = one period of distinct blocks."""
@@ -248,11 +253,12 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
             st = blk_states[j] if blk_states is not None else None
             if st is not None and not st:          # empty dict = stateless
                 st = None
-            x, st_new, aux = transformer.apply_block(
-                blk_params[j], x, cfg, j, positions=positions,
-                state=st, cache_index=cache_index,
-                encoder_out=encoder_out, block_table=block_table,
-                kv_len=kv_len)
+            with jax.named_scope(f"layer{j}"):
+                x, st_new, aux = transformer.apply_block(
+                    blk_params[j], x, cfg, j, positions=positions,
+                    state=st, cache_index=cache_index,
+                    encoder_out=encoder_out, block_table=block_table,
+                    kv_len=kv_len)
             new_states.append(st_new if st_new is not None else {})
             for k, v in aux.items():
                 aux_acc[k] = aux_acc.get(k, 0.0) + v
@@ -279,10 +285,11 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
             body = jax.checkpoint(body)
         collected = []
         for g in range(n_groups):
-            bp = jax.tree_util.tree_map(lambda l: l[g], params["blocks"])
+            bp = jax.tree_util.tree_map(lambda l, g=g: l[g],
+                                        params["blocks"])
             st = None
             if states is not None:
-                st = jax.tree_util.tree_map(lambda l: l[g], states)
+                st = jax.tree_util.tree_map(lambda l, g=g: l[g], states)
             h, (new_st, aux_g) = body(h, (bp, st))
             collected.append(new_st)
             for k, v in aux_g.items():

@@ -6,7 +6,7 @@ the activation function runs on the DCE path (I-BERT integer GELU when
 ``pum.ibert``)."""
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +16,7 @@ from repro.core import ibert
 from repro.dist.sharding import shard_act
 from repro.models import layers
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 
 def init_mlp(key, cfg: ModelConfig, d_ff: int = 0) -> Params:

@@ -18,7 +18,7 @@ the trainer to add.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,7 @@ from repro.config import ModelConfig
 from repro.dist.sharding import shard_act
 from repro.models import layers
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 # hillclimb knob: group-local dispatch (sort within per-sequence groups —
 # no global cross-device argsort; set via set_grouped_dispatch)
@@ -116,7 +116,7 @@ def _dispatch_ffn_grouped(p: Params, xg: jax.Array, gate_vals, gate_idx,
 
 
 def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
-            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+            ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """x: [B, S, D] -> (out [B, S, D], aux losses)."""
     b, s, d = x.shape
     e = cfg.moe.num_experts

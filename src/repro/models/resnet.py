@@ -10,7 +10,7 @@ Functional JAX: params are nested dicts; init/apply pairs.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,7 @@ import numpy as np
 from repro.config import PUMConfig
 from repro.core.pum_linear import pum_linear
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 
 def _he_init(key, shape, fan_in):

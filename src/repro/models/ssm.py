@@ -12,7 +12,7 @@ stay on the standard compute path; only the static projections
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ from repro.config import ModelConfig
 from repro.dist.sharding import shard_act
 from repro.models import layers
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 CHUNK = 256
 
@@ -87,8 +87,8 @@ def _selective_params(p: Params, xc: jax.Array, cfg: ModelConfig):
 
 
 def mamba(p: Params, x: jax.Array, cfg: ModelConfig, *,
-          state: Optional[Params] = None,
-          ) -> Tuple[jax.Array, Optional[Params]]:
+          state: Params | None = None,
+          ) -> tuple[jax.Array, Params | None]:
     """x: [B, S, D] -> ([B, S, D], state')."""
     bsz, s, d = x.shape
     inner = _inner(cfg)

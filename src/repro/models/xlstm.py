@@ -14,7 +14,7 @@ per-step products (standard path), per the paper's §5.2 split.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -24,10 +24,10 @@ from repro.config import ModelConfig
 from repro.dist.sharding import shard_act
 from repro.models import layers
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 
-def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+def _dims(cfg: ModelConfig) -> tuple[int, int, int]:
     inner = 2 * cfg.d_model
     heads = cfg.num_heads
     return inner, heads, inner // heads
@@ -66,8 +66,8 @@ def make_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
 
 
 def mlstm(p: Params, x: jax.Array, cfg: ModelConfig, *,
-          state: Optional[Params] = None,
-          ) -> Tuple[jax.Array, Optional[Params]]:
+          state: Params | None = None,
+          ) -> tuple[jax.Array, Params | None]:
     b, s, d = x.shape
     inner, heads, hd = _dims(cfg)
     qkv = layers.linear(p["wqkv"], x, cfg.pum)
@@ -244,8 +244,8 @@ def _slstm_step(carry, gates):
 
 
 def slstm(p: Params, x: jax.Array, cfg: ModelConfig, *,
-          state: Optional[Params] = None,
-          ) -> Tuple[jax.Array, Optional[Params]]:
+          state: Params | None = None,
+          ) -> tuple[jax.Array, Params | None]:
     b, s, d = x.shape
     inner, _, _ = _dims(cfg)
     z = layers.linear(p["wz"], x, cfg.pum).astype(jnp.float32)

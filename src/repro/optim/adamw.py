@@ -5,14 +5,14 @@ identically to the FSDP parameter layout (ZeRO-style sharded optimiser).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import TrainConfig
 
-OptState = Dict[str, Any]
+OptState = dict[str, Any]
 
 
 def adamw_init(params: Any) -> OptState:
@@ -30,7 +30,7 @@ def global_norm(tree: Any) -> jax.Array:
 
 
 def clip_by_global_norm(grads: Any, max_norm: float,
-                        ) -> Tuple[Any, jax.Array]:
+                        ) -> tuple[Any, jax.Array]:
     norm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
     return jax.tree_util.tree_map(
@@ -38,7 +38,7 @@ def clip_by_global_norm(grads: Any, max_norm: float,
 
 
 def adamw_update(params: Any, grads: Any, state: OptState, lr: jax.Array,
-                 cfg: TrainConfig) -> Tuple[Any, OptState]:
+                 cfg: TrainConfig) -> tuple[Any, OptState]:
     count = state["count"] + 1
     b1, b2 = cfg.b1, cfg.b2
     bc1 = 1.0 - b1 ** count.astype(jnp.float32)

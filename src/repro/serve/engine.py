@@ -25,7 +25,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +36,7 @@ from repro.models import lm
 
 
 def make_decode_step(cfg: ModelConfig, scan_layers: bool = True,
-                     kv_len: Optional[int] = None):
+                     kv_len: int | None = None):
     """(params, states, token [B,1], cache_index, extras) ->
     (logits [B,1,V], states').
 
@@ -51,8 +51,8 @@ def make_decode_step(cfg: ModelConfig, scan_layers: bool = True,
     contiguous cache's reduction shapes bit-exactly."""
 
     def decode_step(params, states, token, cache_index, *,
-                    encoder_out: Optional[jax.Array] = None,
-                    block_table: Optional[jax.Array] = None):
+                    encoder_out: jax.Array | None = None,
+                    block_table: jax.Array | None = None):
         logits, states, _ = lm.forward(
             params, token, cfg, states=states, cache_index=cache_index,
             encoder_out=encoder_out, last_only=True,
@@ -102,8 +102,8 @@ class ServeEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 128,
-                 prepack: Optional[bool] = None, use_scan: bool = True,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 prepack: bool | None = None, use_scan: bool = True,
+                 mesh: jax.sharding.Mesh | None = None):
         if prepack is None:
             prepack = cfg.pum.mode in ("int8", "pum")
         if prepack and cfg.pum.mode in ("int8", "pum"):
@@ -140,8 +140,8 @@ class ServeEngine:
         return shd.use_mesh(self.mesh, tp_serving=True)
 
     def _prefill_impl(self, params, tokens: jax.Array,
-                      encoder_frames: Optional[jax.Array],
-                      ) -> Tuple[Any, jax.Array, Optional[jax.Array]]:
+                      encoder_frames: jax.Array | None,
+                      ) -> tuple[Any, jax.Array, jax.Array | None]:
         b, s = tokens.shape
         states = lm.init_state(self.cfg, b, self.max_len)
         encoder_out = None
@@ -165,8 +165,8 @@ class ServeEngine:
                 f"with max_len >= {prompt_len + steps}")
 
     def prefill(self, tokens: jax.Array,
-                encoder_frames: Optional[jax.Array] = None,
-                ) -> Tuple[Any, jax.Array, Optional[jax.Array]]:
+                encoder_frames: jax.Array | None = None,
+                ) -> tuple[Any, jax.Array, jax.Array | None]:
         with self.mesh_ctx():
             return self._prefill(self.params, tokens, encoder_frames)
 
@@ -200,9 +200,9 @@ class ServeEngine:
 
     def generate(self, prompt: jax.Array, steps: int,
                  temperature: float = 0.0,
-                 encoder_frames: Optional[jax.Array] = None,
+                 encoder_frames: jax.Array | None = None,
                  seed: int = 0,
-                 use_scan: Optional[bool] = None) -> jax.Array:
+                 use_scan: bool | None = None) -> jax.Array:
         """prompt: [B, S] -> [B, S + steps] greedy/sampled continuation."""
         if use_scan is None:
             use_scan = self.use_scan
@@ -228,7 +228,7 @@ class ServeEngine:
 
     def generate_loop(self, prompt: jax.Array, steps: int,
                       temperature: float = 0.0,
-                      encoder_frames: Optional[jax.Array] = None,
+                      encoder_frames: jax.Array | None = None,
                       seed: int = 0) -> jax.Array:
         """One jitted dispatch per token (the pre-scan implementation)."""
         b, s = prompt.shape

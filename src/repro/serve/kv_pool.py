@@ -35,7 +35,7 @@ zeros either way.
 from __future__ import annotations
 
 from collections import deque
-from typing import Any, List, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -93,7 +93,7 @@ class BlockAllocator:
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
-    def alloc(self, n: int) -> Optional[List[int]]:
+    def alloc(self, n: int) -> list[int] | None:
         """Claim ``n`` blocks, or return None (not partial) if the pool
         cannot fund the request right now."""
         if n < 0:
@@ -104,7 +104,7 @@ class BlockAllocator:
         self._live.update(ids)
         return ids
 
-    def free(self, ids: List[int]) -> None:
+    def free(self, ids: list[int]) -> None:
         for i in ids:
             if i not in self._live:
                 raise ValueError(
@@ -123,8 +123,8 @@ def is_paged_cache(state: Any) -> bool:
     return isinstance(state, dict) and "k_pool" in state
 
 
-def slot_states_view(cfg: ModelConfig, states: List[Any],
-                     slot: jax.Array) -> List[Any]:
+def slot_states_view(cfg: ModelConfig, states: list[Any],
+                     slot: jax.Array) -> list[Any]:
     """A batch-1 view of ``slot`` for chunked prefill: recurrent leaves
     (axis 1 = slots under the group stacking) are sliced to one row;
     shared paged pools pass through whole."""
@@ -139,8 +139,8 @@ def slot_states_view(cfg: ModelConfig, states: List[Any],
     return out
 
 
-def slot_states_merge(cfg: ModelConfig, states: List[Any], one: List[Any],
-                      slot: jax.Array) -> List[Any]:
+def slot_states_merge(cfg: ModelConfig, states: list[Any], one: list[Any],
+                      slot: jax.Array) -> list[Any]:
     """Inverse of :func:`slot_states_view`: write the updated batch-1
     recurrent rows back at ``slot``; adopt the updated pools whole."""
     out = []
@@ -155,8 +155,8 @@ def slot_states_merge(cfg: ModelConfig, states: List[Any], one: List[Any],
     return out
 
 
-def reset_slot_recurrent(cfg: ModelConfig, states: List[Any],
-                         slot: jax.Array, max_len: int) -> List[Any]:
+def reset_slot_recurrent(cfg: ModelConfig, states: list[Any],
+                         slot: jax.Array, max_len: int) -> list[Any]:
     """Return ``states`` with slot ``slot``'s recurrent rows restored to
     their init values (paged pools pass through: stale blocks are
     handled by allocation + masking).
@@ -182,8 +182,8 @@ def reset_slot_recurrent(cfg: ModelConfig, states: List[Any],
     return out
 
 
-def freeze_inactive_rows(states_old: List[Any], states_new: List[Any],
-                         active: jax.Array) -> List[Any]:
+def freeze_inactive_rows(states_old: list[Any], states_new: list[Any],
+                         active: jax.Array) -> list[Any]:
     """Keep recurrent-state rows of inactive slots at their pre-step
     values (leaves are [n_groups, B, ...]; ``active`` is [B] bool).
 
@@ -195,14 +195,15 @@ def freeze_inactive_rows(states_old: List[Any], states_new: List[Any],
     prompt state the chunks are accumulating.
     """
     out = []
-    for st_old, st_new in zip(states_old, states_new):
-        if is_paged_cache(st_old) or not st_old:
-            out.append(st_new)
-        else:
-            out.append(jax.tree_util.tree_map(
-                lambda o, n: jnp.where(
-                    active.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
-                st_old, st_new))
+    with jax.named_scope("freeze_inactive"):
+        for st_old, st_new in zip(states_old, states_new):
+            if is_paged_cache(st_old) or not st_old:
+                out.append(st_new)
+            else:
+                out.append(jax.tree_util.tree_map(
+                    lambda o, n: jnp.where(
+                        active.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
+                    st_old, st_new))
     return out
 
 
@@ -223,7 +224,7 @@ def has_recurrent_state(cfg: ModelConfig) -> bool:
                for j in range(p_len))
 
 
-def place_serve_states(states: List[Any], mesh) -> List[Any]:
+def place_serve_states(states: list[Any], mesh) -> list[Any]:
     """Place a freshly-initialised decode-state tree on a TP serving
     mesh: KV pools/caches shard their KV-head axis over ``model``
     (``dist.sharding.serve_state_specs``), recurrent rows replicate.
@@ -237,7 +238,7 @@ def place_serve_states(states: List[Any], mesh) -> List[Any]:
     return jax.device_put(states, shd.named_shardings(mesh, specs))
 
 
-def kv_cache_bytes(states: List[Any]) -> int:
+def kv_cache_bytes(states: list[Any]) -> int:
     """Total bytes held by KV storage (contiguous ``k``/``v`` windows or
     paged ``k_pool``/``v_pool`` stores) in a decode-state tree."""
     total = 0

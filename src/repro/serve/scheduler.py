@@ -82,7 +82,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, List, Optional, Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -113,14 +113,14 @@ class Request:
     eos_id: int = -1
     seed: int = 0
     arrival: int = 0
-    rid: Optional[int] = None
+    rid: int | None = None
 
 
 @dataclasses.dataclass
 class Completion:
     rid: int
-    prompt: List[int]
-    tokens: List[int]                  # generated tokens, EOS included
+    prompt: list[int]
+    tokens: list[int]                  # generated tokens, EOS included
     finish_reason: str                 # "eos" | "length"
     admitted_step: int                 # scheduler step of admission
     finished_step: int                 # scheduler step of the last token
@@ -131,7 +131,7 @@ class _PrefillJob:
     """A slot mid-prefill: the prompt streams into the paged pool in
     chunks; the slot joins decode once the last chunk lands."""
     req: Request
-    prompt: List[int]
+    prompt: list[int]
     pos: int = 0                       # prompt tokens already fed
 
 
@@ -139,7 +139,27 @@ class _PrefillJob:
 # The jitted slot-wise decode step
 # ---------------------------------------------------------------------------
 
-def make_slot_step(cfg: ModelConfig, kv_len: Optional[int] = None):
+# Donated argnums for the jitted slot step / chunk-prefill step.  The
+# graph auditor's mutation self-test flips this to () to prove the
+# donation rule notices undonated decode carries (analysis/mutations.py).
+_STEP_DONATE = (1,)
+
+
+def _mask_block_table(block_table: jax.Array, active: jax.Array):
+    """Route every non-decoding row's KV writes to the trash block.
+
+    Rows that are empty, retired, or still mid-prefill must not scribble
+    over pool blocks another slot owns (or that a streaming prefill is
+    filling); zeroing their table rows sends the masked writes to the
+    reserved trash block instead.  Lives *inside* the jitted slot step
+    (an exact int32 multiply) so the auditor's masked-scatter rule can
+    statically see that scatter addresses depend on the active mask.
+    """
+    with jax.named_scope("mask_table"):
+        return block_table * active.astype(block_table.dtype)[:, None]
+
+
+def make_slot_step(cfg: ModelConfig, kv_len: int | None = None):
     """Build the one-dispatch-per-token engine core.
 
     (params, states, cur_tok [B,1], cache_index [B], keys [B,2],
@@ -154,9 +174,10 @@ def make_slot_step(cfg: ModelConfig, kv_len: Optional[int] = None):
     (``gen - 1``), mirroring ``generate_loop``'s ``fold_in(key, i)``.
 
     ``block_table`` (and ``kv_len`` at build time) select the paged KV
-    path: rows address the shared block pool through their table row;
-    retired/empty rows carry all-zero tables, so their masked writes
-    land in the reserved trash block.
+    path: rows address the shared block pool through their table row.
+    The step masks the table itself (``_mask_block_table``): rows not
+    actively decoding write to the reserved trash block, whatever table
+    the host hands in.
     """
     decode = make_decode_step(cfg, kv_len=kv_len)
     paged = kv_len is not None
@@ -164,6 +185,8 @@ def make_slot_step(cfg: ModelConfig, kv_len: Optional[int] = None):
     def slot_step(params, states, cur_tok, cache_index, keys, active,
                   temp, eos, gen, max_toks, block_table=None):
         step_keys = jax.vmap(jax.random.fold_in)(keys, gen - 1)
+        if paged:
+            block_table = _mask_block_table(block_table, active)
         logits, new_states = decode(params, states, cur_tok, cache_index,
                                     block_table=block_table)
         if paged:
@@ -213,10 +236,10 @@ class ContinuousBatchingScheduler:
     """
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int = 4,
-                 max_len: int = 128, prepack: Optional[bool] = None,
+                 max_len: int = 128, prepack: bool | None = None,
                  kv_block_size: int = 0, num_kv_blocks: int = 0,
                  chunked_prefill: bool = False,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: jax.sharding.Mesh | None = None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if chunked_prefill and kv_block_size <= 0:
@@ -245,7 +268,7 @@ class ContinuousBatchingScheduler:
             # prefill still applies to their per-token state scans
             self._has_kv = kv_pool.has_kv_cache(self.cfg)
             self._step = jax.jit(make_slot_step(self.cfg, kv_len=max_len),
-                                 donate_argnums=(1,))
+                                 donate_argnums=_STEP_DONATE)
             self._chunk_prefill = self._build_chunk_prefill()
             self._has_recurrent = kv_pool.has_recurrent_state(self.cfg)
             cfg_, ml_ = self.cfg, max_len
@@ -255,7 +278,7 @@ class ContinuousBatchingScheduler:
                 donate_argnums=(0,))
         else:
             self._step = jax.jit(make_slot_step(self.cfg),
-                                 donate_argnums=(1,))
+                                 donate_argnums=_STEP_DONATE)
             self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._reset()
 
@@ -267,8 +290,8 @@ class ContinuousBatchingScheduler:
                 block_size=self.block_size)
             self._alloc = kv_pool.BlockAllocator(self.num_kv_blocks)
             self._block_table = np.zeros((b, self.table_width), np.int32)
-            self._slot_blocks: List[List[int]] = [[] for _ in range(b)]
-            self._prefills: Dict[int, _PrefillJob] = {}
+            self._slot_blocks: list[list[int]] = [[] for _ in range(b)]
+            self._prefills: dict[int, _PrefillJob] = {}
         else:
             self.states = lm.init_state(self.cfg, b, self.max_len)
             self._prefills = {}
@@ -283,8 +306,8 @@ class ContinuousBatchingScheduler:
         self._eos = np.full((b,), -1, np.int32)
         self._gen = np.zeros((b,), np.int32)
         self._max_toks = np.ones((b,), np.int32)
-        self._slot_req: List[Optional[Request]] = [None] * b
-        self._slot_toks: List[List[int]] = [[] for _ in range(b)]
+        self._slot_req: list[Request | None] = [None] * b
+        self._slot_toks: list[list[int]] = [[] for _ in range(b)]
         self._slot_admitted = np.zeros((b,), np.int64)
 
     @staticmethod
@@ -315,7 +338,7 @@ class ContinuousBatchingScheduler:
             states = kv_pool.slot_states_merge(cfg, states, one, slot)
             return states, logits
 
-        return jax.jit(chunk_prefill, donate_argnums=(1,))
+        return jax.jit(chunk_prefill, donate_argnums=_STEP_DONATE)
 
     # -- admission ---------------------------------------------------------
 
@@ -326,7 +349,7 @@ class ContinuousBatchingScheduler:
                                      self.block_size)
 
     def _admit(self, slot: int, req: Request, step: int,
-               out: Dict[int, Completion]) -> bool:
+               out: dict[int, Completion]) -> bool:
         """Prefill ``req`` into ``slot``.  Returns True if the request
         occupies the slot (False: it completed at prefill already)."""
         prompt = list(int(t) for t in req.prompt)
@@ -389,7 +412,7 @@ class ContinuousBatchingScheduler:
             self._slot_blocks[slot] = []
         self._block_table[slot, :] = 0
 
-    def _feed_prefills(self, step: int, out: Dict[int, Completion]) -> int:
+    def _feed_prefills(self, step: int, out: dict[int, Completion]) -> int:
         """Advance every mid-prefill slot by one chunk (``block_size``
         tokens when chunked, the whole prompt otherwise).  A slot whose
         final chunk lands samples its first token and either joins the
@@ -442,7 +465,7 @@ class ContinuousBatchingScheduler:
     # -- the serve loop ----------------------------------------------------
 
     def run(self, requests: Sequence[Request],
-            max_steps: int = 100_000) -> Dict[int, Completion]:
+            max_steps: int = 100_000) -> dict[int, Completion]:
         """Serve a trace of requests to completion.
 
         Requests are admitted FIFO within arrival order as slots free
@@ -486,7 +509,7 @@ class ContinuousBatchingScheduler:
                         f"num_kv_blocks >= {need}")
         pending = deque(sorted(reqs, key=lambda r: r.arrival))
         ready: deque = deque()
-        out: Dict[int, Completion] = {}
+        out: dict[int, Completion] = {}
         step = 0               # simulated clock (jumps over idle gaps)
         work_steps = 0         # decode/prefill dispatches performed
 
@@ -535,13 +558,10 @@ class ContinuousBatchingScheduler:
                          self._cache_index, self._keys, self._active,
                          self._temp, self._eos, self._gen, self._max_toks)
             if self.paged:
-                # rows not actively decoding (empty, retired, or still
-                # mid-prefill) get an all-zero table: their masked writes
-                # go to the trash block instead of scribbling over the
-                # blocks a streaming prefill is filling
-                decode_table = self._block_table * \
-                    self._active[:, None].astype(np.int32)
-                step_args += (jnp.asarray(decode_table),)
+                # the jitted step masks the table against `active` itself
+                # (_mask_block_table), so non-decoding rows' writes land
+                # in the trash block no matter what the host passes here
+                step_args += (jnp.asarray(self._block_table),)
             with self.engine.mesh_ctx():
                 (self.states, tok, cache_index, keys, active, gen,
                  done) = self._step(*step_args)
@@ -588,7 +608,7 @@ def synthetic_workload(n_requests: int, vocab_size: int, *,
                        mean_interarrival: float = 0.0,
                        temperature_choices: Sequence[float] = (0.0, 0.7),
                        eos_rate: float = 0.25, seed: int = 0,
-                       ) -> List[Request]:
+                       ) -> list[Request]:
     """A seeded trace of requests with varied lengths/arrivals.
 
     ``mean_interarrival`` is in decode steps (0 = a burst at t=0);
@@ -613,7 +633,7 @@ def synthetic_workload(n_requests: int, vocab_size: int, *,
     return reqs
 
 
-def oracle_completion(engine: ServeEngine, req: Request) -> List[int]:
+def oracle_completion(engine: ServeEngine, req: Request) -> list[int]:
     """The per-request oracle: run ``req`` alone through the per-token
     loop, then truncate at its EOS (inclusive).  The scheduler must
     reproduce this token list exactly for every request in any trace."""

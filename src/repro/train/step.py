@@ -7,7 +7,6 @@ error feedback (residual carried in opt_state["ef"]).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +21,7 @@ MOE_Z_WEIGHT = 0.001
 
 
 def make_loss_fn(cfg: ModelConfig, scfg: ShardingConfig = ShardingConfig()):
-    def loss_fn(params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    def loss_fn(params, batch) -> tuple[jax.Array, dict[str, jax.Array]]:
         tokens = batch["tokens"]
         if scfg.bf16_params:
             # cast sharded master weights before use: FSDP all-gathers run

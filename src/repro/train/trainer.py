@@ -6,7 +6,7 @@ restore) is the multi-host one — see ckpt/ and ft/ for the pieces.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 
@@ -22,7 +22,7 @@ class Trainer:
     def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
                  scfg: ShardingConfig = ShardingConfig(),
                  batch: int = 8, seq: int = 64,
-                 preemption: Optional[PreemptionHandler] = None):
+                 preemption: PreemptionHandler | None = None):
         self.cfg = cfg
         self.tcfg = tcfg
         self.scfg = scfg
@@ -48,7 +48,7 @@ class Trainer:
             params, opt_state = tree["params"], tree["opt_state"]
         return params, opt_state, start
 
-    def run(self, steps: Optional[int] = None) -> Dict[str, Any]:
+    def run(self, steps: int | None = None) -> dict[str, Any]:
         params, opt_state, start = self.init_or_restore()
         steps = steps if steps is not None else self.tcfg.steps
         step = start

@@ -1,0 +1,76 @@
+"""The bench-regression gate's diff logic (``benchmarks.compare``),
+in particular the auditor-style structured report for metrics that
+vanish from a fresh run — the failure mode a wide markdown table makes
+easy to miss in CI logs.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))               # benchmarks/ lives at repo root
+from benchmarks.compare import (compare, missing_metrics, pct_change,
+                                render_markdown, render_missing_report)
+
+
+BASE = {"mvm.us": (10.0, "us"), "decode.tok_s": (100.0, "tok/s"),
+        "pool.bytes": (4096.0, "bytes")}
+
+
+def test_missing_metric_fails_and_reports_structured():
+    fresh = {"mvm.us": (10.0, "us"), "decode.tok_s": (100.0, "tok/s")}
+    rows, bad = compare(BASE, fresh, tolerance=25.0, ignore=[])
+    assert bad
+    missing = missing_metrics(BASE, fresh, ignore=[])
+    assert missing == [("pool.bytes", 4096.0, "bytes")]
+    report = render_missing_report(missing, "BENCH.fresh.json")
+    lines = report.splitlines()
+    assert lines[0].startswith("1 missing metric(s)")
+    # auditor shape: "  [rule] subject: detail"
+    assert lines[1].startswith("  [missing-metric] pool.bytes: ")
+    assert "4096 bytes" in lines[1]
+    assert "BENCH.fresh.json" in lines[0]
+
+
+def test_ignored_glob_suppresses_missing():
+    fresh = {"mvm.us": (10.0, "us"), "decode.tok_s": (100.0, "tok/s")}
+    rows, bad = compare(BASE, fresh, tolerance=25.0, ignore=["pool.*"])
+    assert not bad
+    assert missing_metrics(BASE, fresh, ignore=["pool.*"]) == []
+
+
+def test_direction_awareness():
+    # us up = regression; tok/s up = improvement
+    fresh = {"mvm.us": (20.0, "us"), "decode.tok_s": (200.0, "tok/s"),
+             "pool.bytes": (4096.0, "bytes")}
+    rows, bad = compare(BASE, fresh, tolerance=25.0, ignore=[])
+    assert bad
+    by_name = {r[0]: r[4] for r in rows}
+    assert by_name["mvm.us"].startswith("❌ regressed")
+    assert by_name["decode.tok_s"] == "✅ improved"
+
+
+def test_within_tolerance_is_not_a_regression():
+    fresh = {k: (v * 1.1 if u in ("us", "bytes") else v / 1.1, u)
+             for k, (v, u) in BASE.items()}
+    rows, bad = compare(BASE, fresh, tolerance=25.0, ignore=[])
+    assert not bad
+    assert all(r[4] == "⚠️ worse (within tolerance)" for r in rows)
+
+
+def test_new_metric_is_informational():
+    fresh = dict(BASE, **{"brand.new": (1.0, "x")})
+    rows, bad = compare(BASE, fresh, tolerance=25.0, ignore=[])
+    assert not bad
+    assert any(r[0] == "brand.new" and "new" in r[4] for r in rows)
+
+
+def test_pct_change_zero_baseline():
+    assert pct_change(0.0, 0.0) == 0.0
+    assert pct_change(0.0, 1.0) == float("inf")
+
+
+def test_markdown_renders_every_row():
+    rows, _ = compare(BASE, dict(BASE), tolerance=25.0, ignore=[])
+    md = render_markdown(rows, 25.0)
+    for name in BASE:
+        assert f"`{name}`" in md

@@ -1,0 +1,61 @@
+"""Compile-count regression gate for the serving hot path.
+
+Decode throughput dies silently when the slot step or the chunked
+prefill retraces: the graphs still produce correct tokens, just with a
+multi-second XLA compile folded into random steps.  This pins the
+contract directly via the jit trace caches (``_cache_size``): after a
+full run over mixed prompt lengths, the decode step and the chunk
+prefill have each compiled exactly once, and a second run compiles
+nothing new.
+
+(The static side of the same contract — no weak-typed invars, retraces
+reproduce the identical jaxpr — is the auditor's single-compilation
+rule; see ``make audit``.)
+"""
+import jax
+import pytest
+
+from repro.config import PUMConfig, small_test_config
+from repro.models import lm
+from repro.serve import ContinuousBatchingScheduler, Request
+
+BLOCK = 4
+
+
+def _sched(mode="bf16", chunked=True):
+    cfg = small_test_config(pum=PUMConfig(mode=mode))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(kv_block_size=BLOCK, chunked_prefill=True) if chunked else {}
+    return ContinuousBatchingScheduler(cfg, params, num_slots=2,
+                                       max_len=32, **kw)
+
+
+def _reqs(lengths):
+    return [Request(list(range(1, n + 1)), max_tokens=3, rid=i)
+            for i, n in enumerate(lengths)]
+
+
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_chunked_serving_compiles_each_step_once(mode):
+    sched = _sched(mode=mode)
+    # prompt lengths 4 and 8: different chunk *counts*, same chunk shape
+    sched.run(_reqs([BLOCK, 2 * BLOCK]))
+    assert sched._step._cache_size() == 1, (
+        "slot decode step compiled more than once across mixed requests")
+    assert sched._chunk_prefill._cache_size() == 1, (
+        "chunk prefill compiled per prompt length — chunking must pin "
+        "the token-block shape")
+
+    # steady state: a second run with fresh lengths compiles nothing new
+    sched.run(_reqs([2 * BLOCK, BLOCK]))
+    assert sched._step._cache_size() == 1
+    assert sched._chunk_prefill._cache_size() == 1
+
+
+def test_contiguous_decode_compiles_once():
+    sched = _sched(chunked=False)
+    sched.run(_reqs([3, 5]))
+    n = sched._step._cache_size()
+    assert n == 1, f"contiguous slot step compiled {n}x"
+    sched.run(_reqs([6, 2]))
+    assert sched._step._cache_size() == 1

@@ -65,10 +65,9 @@ def test_shard_act_divisibility_guard():
 
 def test_use_mesh_restores_on_exception():
     mesh = make_test_mesh((1,), ("data",))
-    with pytest.raises(RuntimeError):
-        with shd.use_mesh(mesh):
-            assert shd.current_mesh() is mesh
-            raise RuntimeError("boom")
+    with pytest.raises(RuntimeError), shd.use_mesh(mesh):
+        assert shd.current_mesh() is mesh
+        raise RuntimeError("boom")
     assert shd.current_mesh() is None
 
 

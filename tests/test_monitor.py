@@ -1,0 +1,118 @@
+"""First coverage for ``ft.monitor``: the metrics registry and the two
+fleet monitors (previously dormant — no test touched this module).
+
+Clock-dependent paths take explicit ``now`` values, file-backed paths
+use tmp_path; nothing here sleeps.
+"""
+import pytest
+
+from repro.ft.monitor import (Counter, Gauge, HeartbeatMonitor,
+                              MetricsRegistry, StragglerDetector)
+
+
+# ---------------------------------------------------------------------------
+# registry + instruments
+# ---------------------------------------------------------------------------
+
+def test_counter_is_monotone():
+    c = Counter("tokens")
+    c.inc()
+    c.inc(41)
+    assert c.value == 42
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert c.value == 42
+
+
+def test_gauge_moves_both_ways():
+    g = Gauge("slots")
+    g.set(3)
+    g.add(-2)
+    assert g.value == 1.0
+
+
+def test_registration_is_idempotent_per_name():
+    reg = MetricsRegistry()
+    a = reg.counter("served", "tokens served")
+    b = reg.counter("served")
+    assert a is b
+    a.inc(5)
+    assert reg.snapshot()["served"] == 5
+
+
+def test_registration_rejects_kind_change():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(ValueError):
+        reg.gauge("x")
+
+
+def test_snapshot_is_flat_sorted_and_detached():
+    reg = MetricsRegistry()
+    reg.gauge("b.gauge").set(2.5)
+    reg.counter("a.count").inc(3)
+    snap = reg.snapshot()
+    assert snap == {"a.count": 3.0, "b.gauge": 2.5}
+    assert list(snap) == ["a.count", "b.gauge"]
+    snap["a.count"] = 999                      # a copy, not a view
+    assert reg.snapshot()["a.count"] == 3.0
+    assert reg.names() == ["a.count", "b.gauge"]
+
+
+# ---------------------------------------------------------------------------
+# straggler detector
+# ---------------------------------------------------------------------------
+
+def test_straggler_flagged_against_fleet_median():
+    det = StragglerDetector(n_hosts=4, threshold=1.5)
+    for _ in range(8):
+        for h in range(4):
+            det.report(h, 2.0 if h == 3 else 1.0)
+    assert det.stragglers() == [3]
+    assert det.slowdown(3) == pytest.approx(2.0)
+    assert det.slowdown(0) == pytest.approx(1.0)
+
+
+def test_straggler_silent_hosts_are_not_flagged():
+    det = StragglerDetector(n_hosts=3)
+    det.report(0, 1.0)
+    assert det.stragglers() == []              # host 1/2 never reported
+    assert StragglerDetector(n_hosts=2).stragglers() == []
+
+
+def test_straggler_reports_into_registry():
+    reg = MetricsRegistry()
+    det = StragglerDetector(n_hosts=3, metrics=reg)
+    det.report(0, 1.0)
+    det.report(1, 1.0)
+    det.report(2, 9.0)
+    det.stragglers()
+    snap = reg.snapshot()
+    assert snap["ft.step_reports"] == 3
+    assert snap["ft.stragglers"] == 1
+
+
+# ---------------------------------------------------------------------------
+# heartbeat monitor
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_dead_after_timeout(tmp_path):
+    reg = MetricsRegistry()
+    hb0 = HeartbeatMonitor(str(tmp_path), host_id=0, timeout_s=10.0,
+                           metrics=reg)
+    hb1 = HeartbeatMonitor(str(tmp_path), host_id=1, timeout_s=10.0)
+    hb0.beat(now=100.0)
+    hb1.beat(now=100.0)
+    assert hb0.dead_hosts([0, 1], now=105.0) == []
+    hb0.beat(now=111.0)                        # host 1 goes silent
+    assert hb0.dead_hosts([0, 1], now=115.0) == [1]
+    snap = reg.snapshot()
+    assert snap["ft.heartbeats"] == 2
+    assert snap["ft.dead_hosts"] == 1
+
+
+def test_heartbeat_missing_or_garbled_file_is_dead(tmp_path):
+    hb = HeartbeatMonitor(str(tmp_path), host_id=0, timeout_s=10.0)
+    hb.beat(now=100.0)
+    (tmp_path / "host_2.hb").write_text("not-a-float")
+    assert hb.dead_hosts([0, 1, 2], now=101.0) == [1, 2]

@@ -389,7 +389,7 @@ def test_scheduler_eos_at_every_position():
     sched = _sched(num_slots=2)
     base = Request([6, 2, 8], max_tokens=6, temperature=0.0, seed=13)
     rollout = oracle_completion(sched.engine, base)
-    for pos, eos in enumerate(rollout):
+    for _pos, eos in enumerate(rollout):
         reqs = [
             Request([6, 2, 8], max_tokens=6, eos_id=int(eos), seed=13),
             Request([5, 5, 5, 5], max_tokens=6, temperature=0.7, seed=99),

@@ -89,7 +89,7 @@ def test_grad_compression_error_feedback():
     res = compress.zeros_like_residual(grads)
     total = jnp.zeros((64, 64))
     exact = jnp.zeros((64, 64))
-    for i in range(20):
+    for _ in range(20):
         g = {"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)}
         dec, res = compress.ef_compress_grads(g, res)
         total = total + dec["w"]
@@ -147,7 +147,7 @@ def test_checkpoint_keep_k(tmp_path):
 def test_straggler_detector():
     from repro.ft import StragglerDetector
     det = StragglerDetector(n_hosts=4, threshold=1.5)
-    for step in range(8):
+    for _ in range(8):
         for h in range(4):
             det.report(h, 1.0 if h != 2 else 2.5)
     assert det.stragglers() == [2]
