@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist test-serve test-tp lint quickstart bench \
+.PHONY: test test-dist test-serve test-tp test-chaos lint quickstart bench \
 	bench-smoke bench-baseline bench-check audit
 
 # tier-1 verify; test_distributed.py spawns its own subprocesses with
@@ -40,6 +40,13 @@ audit:
 test-serve:
 	$(PY) -m pytest -q tests/test_scheduler.py tests/test_serve_scan.py \
 		tests/test_sampling.py tests/test_prepack.py tests/test_bitslice.py
+
+# fault-injection + front-end resilience suite (PR 7): a fixed seed
+# matrix of chaos storms (tests/test_chaos.py CHAOS_SEEDS) must leave
+# survivors oracle-identical and the block allocator leak-free, and
+# overload must come back typed, never raised (tests/test_frontend.py)
+test-chaos:
+	$(PY) -m pytest -q tests/test_chaos.py tests/test_frontend.py
 
 quickstart:
 	$(PY) examples/quickstart.py

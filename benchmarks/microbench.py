@@ -334,6 +334,86 @@ def _bench_serve_tp(small: bool) -> list[Row]:
     return rows
 
 
+def bench_serve_load(small: bool = False) -> list[Row]:
+    """Latency under load through the resilient front-end (PR 7).
+
+    Two seeded Poisson traces on the paged scheduler:
+
+      * a *sustainable* trace — every request completes; the rows carry
+        wall-clock throughput (IGNOREd by bench-check: wallclock) plus
+        the virtual-clock TTFT percentiles and outcome counts, which
+        are exact functions of the trace and therefore comparable
+        across machines;
+      * an *overload* trace at ~4x pool capacity with a bounded queue
+        and deadlines — the deterministic shed/reject/expire split is
+        the regression surface: a scheduler change that silently
+        admits less (or more) moves these counts.
+    """
+    from repro.config import small_test_config
+    from repro.models import lm
+    from repro.serve import (ChaosPolicy, ContinuousBatchingScheduler,
+                             ServeFrontend, VirtualClock,
+                             synthetic_workload)
+
+    cfg = small_test_config()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    slots = 2 if small else 4
+    gen = 6 if small else 12
+    n = 8 if small else 24
+    sched = ContinuousBatchingScheduler(
+        cfg, params, num_slots=slots, max_len=32,
+        kv_block_size=4, num_kv_blocks=8 * slots, chunked_prefill=True)
+    # warm the chunk/decode shapes outside the timed window
+    sched.run(synthetic_workload(2 * slots, cfg.vocab_size, max_prompt=6,
+                                 max_new=2, seed=1))
+
+    rows: list[Row] = []
+    fe = ServeFrontend(sched, clock=VirtualClock(), max_queue=4 * slots)
+    trace = synthetic_workload(n, cfg.vocab_size, max_prompt=6,
+                               max_new=gen, eos_rate=0.25,
+                               poisson_rate=10.0 * slots, seed=5)
+    t0 = time.perf_counter()
+    res = fe.results(fe.serve_trace(trace))
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for r in res.values())
+    snap = fe.metrics.snapshot()
+    rows += [("serve_load/poisson_toks_per_s", toks / dt, "tok/s"),
+             ("serve_load/poisson_ok", sum(r.ok for r in res.values()),
+              "requests"),
+             ("serve_load/poisson_ttft_p50_ms",
+              snap["serve.ttft_ms_p50"], "virt_ms"),
+             ("serve_load/poisson_ttft_p99_ms",
+              snap["serve.ttft_ms_p99"], "virt_ms"),
+             ("serve_load/poisson_itl_p50_ms",
+              snap["serve.itl_ms_p50"], "virt_ms")]
+
+    # overload: ~4x capacity in one tight burst, bounded queue, deadlines
+    fe2 = ServeFrontend(sched, clock=VirtualClock(), max_queue=2 * slots,
+                        shed_depth=2 * slots, default_deadline_ms=300.0)
+    over = synthetic_workload(8 * slots, cfg.vocab_size, max_prompt=6,
+                              max_new=gen, eos_rate=0.0,
+                              poisson_rate=400.0 * slots, seed=6)
+    res2 = fe2.results(fe2.serve_trace(over))
+    snap2 = fe2.metrics.snapshot()
+    refused = snap2["serve.rejected"] + snap2["serve.shed"] \
+        + snap2["serve.expired"]
+    rows += [("serve_load/overload_ok",
+              sum(r.ok for r in res2.values()), "requests"),
+             ("serve_load/overload_refused", refused, "requests")]
+
+    # chaos smoke: a seeded storm must not change the allocator's books
+    fe3 = ServeFrontend(sched, clock=VirtualClock(), max_queue=16,
+                        chaos=ChaosPolicy(seed=0, decode_fault_rate=0.1,
+                                          victim_fault_rate=0.05))
+    res3 = fe3.results(fe3.serve_trace(
+        synthetic_workload(n, cfg.vocab_size, max_prompt=6, max_new=gen,
+                           poisson_rate=20.0 * slots, seed=7)))
+    rows.append(("serve_load/chaos_ok",
+                 sum(r.ok for r in res3.values()), "requests"))
+    assert sched._alloc.live_blocks == 0
+    return rows
+
+
 ALL_MICRO = {
     "aes_bulk": bench_aes_bulk,
     "bitslice_mvm": bench_bitslice_mvm,
@@ -342,4 +422,5 @@ ALL_MICRO = {
     "pum_linear": bench_pum_linear,
     "serve_decode": bench_serve_decode,
     "serve_batch": bench_serve_batch,
+    "serve_load": bench_serve_load,
 }

@@ -15,8 +15,10 @@ detected from per-step timing reports:
   * ``MetricsRegistry`` is the in-process counter/gauge sink both of the
     above report into: monotone ``Counter``s (tokens served, restarts,
     stragglers drained), last-value ``Gauge``s (active slots, fleet
-    slowdown), and a flat ``snapshot()`` the launcher can dump as JSON or
-    scrape into whatever telemetry exists outside this repo.
+    slowdown), rolling-window ``Summary``s (TTFT / inter-token latency
+    percentiles for the serving front-end), and a flat ``snapshot()``
+    the launcher can dump as JSON or scrape into whatever telemetry
+    exists outside this repo.
 """
 from __future__ import annotations
 
@@ -67,6 +69,49 @@ class Gauge:
         return self._value
 
 
+class Summary:
+    """Rolling-window distribution for latency-style observations.
+
+    Keeps the last ``window`` observations plus a lifetime count; the
+    registry snapshot expands it to ``<name>_p50`` / ``<name>_p99`` /
+    ``<name>_count`` rows (nearest-rank percentiles over the window —
+    the serving front-end's shed-on-p99 check and the latency-under-load
+    bench both read these).  An empty summary reports 0.0.
+    """
+
+    def __init__(self, name: str, help: str = "", window: int = 512):
+        self.name = name
+        self.help = help
+        self._window: collections.deque = collections.deque(maxlen=window)
+        self._count = 0
+
+    def observe(self, value: int | float) -> None:
+        self._window.append(float(value))
+        self._count += 1
+
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile of the current window, ``q`` in
+        [0, 1]."""
+        if not self._window:
+            return 0.0
+        s = sorted(self._window)
+        return s[min(int(q * len(s)), len(s) - 1)]
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def value(self) -> float:
+        return self.percentile(0.5)
+
+    def snapshot_items(self) -> list[tuple[str, float]]:
+        # alphabetical, so registry snapshots stay globally sorted
+        return [(f"{self.name}_count", float(self._count)),
+                (f"{self.name}_p50", self.percentile(0.5)),
+                (f"{self.name}_p99", self.percentile(0.99))]
+
+
 class MetricsRegistry:
     """Named metric registry with idempotent registration.
 
@@ -78,7 +123,7 @@ class MetricsRegistry:
     """
 
     def __init__(self):
-        self._metrics: dict[str, Counter | Gauge] = {}
+        self._metrics: dict[str, Counter | Gauge | Summary] = {}
         self._lock = threading.Lock()
 
     def _register(self, kind, name: str, help: str):
@@ -100,14 +145,32 @@ class MetricsRegistry:
     def gauge(self, name: str, help: str = "") -> Gauge:
         return self._register(Gauge, name, help)
 
+    def summary(self, name: str, help: str = "", window: int = 512) -> Summary:
+        with self._lock:
+            existing = self._metrics.get(name)
+            if existing is not None:
+                if type(existing) is not Summary:
+                    raise ValueError(
+                        f"metric {name!r} already registered as "
+                        f"{type(existing).__name__}, not Summary")
+                return existing
+            m = Summary(name, help, window=window)
+            self._metrics[name] = m
+            return m
+
     def names(self) -> list[str]:
         with self._lock:
             return sorted(self._metrics)
 
     def snapshot(self) -> dict[str, float]:
         with self._lock:
-            return {name: m.value
-                    for name, m in sorted(self._metrics.items())}
+            out: dict[str, float] = {}
+            for name, m in sorted(self._metrics.items()):
+                if isinstance(m, Summary):
+                    out.update(m.snapshot_items())
+                else:
+                    out[name] = m.value
+            return out
 
 
 class StragglerDetector:

@@ -20,10 +20,17 @@ a 1-D ``model`` mesh; bit-identical to the single-device engine):
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8
 python -m repro.launch.serve --arch glm4-9b --batch-slots 4 --tp 4
 --pum-mode int8 --kv-block-size 16 --chunked-prefill``
+
+Resilient front-end (PR 7: bounded admission queue, deadlines,
+backpressure, typed reject/expire outcomes; optional chaos injection):
+``python -m repro.launch.serve --arch glm4-9b --batch-slots 4
+--kv-block-size 16 --chunked-prefill --frontend --max-queue 16
+--policy edf --deadline-ms 2000 --chaos "seed=0,fault=0.05,victim=0.02"``
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -32,8 +39,8 @@ from repro import configs
 from repro.config import PUMConfig
 from repro.launch.mesh import make_tp_mesh
 from repro.models import lm
-from repro.serve import (ContinuousBatchingScheduler, ServeEngine,
-                         synthetic_workload)
+from repro.serve import (ChaosPolicy, ContinuousBatchingScheduler,
+                         ServeEngine, ServeFrontend, synthetic_workload)
 
 
 def main():
@@ -74,6 +81,25 @@ def main():
                     help="stream prompts through the decode loop in "
                          "block-size chunks interleaved with running "
                          "decodes (requires --kv-block-size)")
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve the trace through the resilient "
+                         "ServeFrontend (admission control, deadlines, "
+                         "backpressure) instead of the raw scheduler "
+                         "loop; requires --batch-slots")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="bounded admission-queue depth for --frontend "
+                         "(overflow is rejected, typed, never raised)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "priority", "edf"],
+                    help="admission-queue ordering for --frontend")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="default per-request deadline for --frontend: "
+                         "queued past it = expired, decoding past it = "
+                         "cancelled with a truncated partial")
+    ap.add_argument("--chaos", default="",
+                    help="fault-injection spec for --frontend, e.g. "
+                         "'seed=0,fault=0.05,victim=0.02,stall=0.05,"
+                         "latency_ms=40' (empty/'off' = disabled)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree: shard prepacked "
                          "weights and the KV pool over a 1-D model mesh "
@@ -121,6 +147,9 @@ def serve_continuous(cfg, params, args, mesh=None) -> None:
         prepack=not args.no_prepack, kv_block_size=args.kv_block_size,
         num_kv_blocks=args.num_kv_blocks,
         chunked_prefill=args.chunked_prefill, mesh=mesh)
+    if args.frontend:
+        serve_frontend(cfg, sched, args, n)
+        return
     reqs = synthetic_workload(
         n, cfg.vocab_size, max_prompt=args.prompt_len, max_new=args.gen,
         mean_interarrival=0.0 if args.workload == "burst" else 2.0,
@@ -146,6 +175,40 @@ def serve_continuous(cfg, params, args, mesh=None) -> None:
           f"steps p50={sorted(lat)[len(lat) // 2]} max={max(lat)}")
     first = out[reqs[0].rid]
     print("sample:", (first.prompt + first.tokens)[:32])
+
+
+def serve_frontend(cfg, sched, args, n) -> None:
+    """Drive the resilient front-end over a (Poisson) arrival trace:
+    overload comes back as typed outcomes, and the run ends with a
+    metrics snapshot instead of a stack trace."""
+    from repro.serve.policies import VirtualClock
+    chaos = ChaosPolicy.parse(args.chaos) if args.chaos else None
+    fe = ServeFrontend(
+        sched, clock=VirtualClock(), max_queue=args.max_queue,
+        policy=args.policy, default_deadline_ms=args.deadline_ms,
+        chaos=chaos if chaos is not None and chaos.enabled else None)
+    reqs = synthetic_workload(
+        n, cfg.vocab_size, max_prompt=args.prompt_len, max_new=args.gen,
+        poisson_rate=0.0 if args.workload == "burst" else 25.0,
+        temperature_choices=(args.temperature,), seed=args.seed)
+    t0 = time.perf_counter()
+    res = fe.results(fe.serve_trace(reqs))
+    dt = time.perf_counter() - t0
+    counts: dict[str, int] = {}
+    for r in res.values():
+        counts[r.status] = counts.get(r.status, 0) + 1
+    toks = sum(len(r.tokens) for r in res.values())
+    print(f"arch={args.arch} mode={args.pum_mode} slots={args.batch_slots} "
+          f"frontend(policy={args.policy}, queue={args.max_queue}"
+          f"{', chaos' if fe.chaos is not None else ''}) "
+          f"served {len(res)} requests ({toks} tokens) in {dt:.2f}s "
+          f"(wall, incl. compile)")
+    print("outcomes:", " ".join(f"{k}={v}" for k, v in sorted(counts.items())))
+    snap = fe.metrics.snapshot()
+    keys = ("serve.ttft_ms_p50", "serve.ttft_ms_p99", "serve.itl_ms_p50",
+            "serve.tok_per_s", "serve.shed", "serve.rejected",
+            "serve.expired", "serve.faults", "serve.retries")
+    print("metrics:", json.dumps({k: round(snap[k], 2) for k in keys}))
 
 
 if __name__ == "__main__":

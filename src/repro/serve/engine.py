@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.dist import sharding as shd
 from repro.models import lm
+from repro.serve.errors import RequestTooLarge
 
 
 def make_decode_step(cfg: ModelConfig, scan_layers: bool = True,
@@ -158,7 +159,7 @@ class ServeEngine:
         that would write past it corrupts nothing but silently truncates
         (dynamic_update_slice clamps), so reject it loudly instead."""
         if prompt_len + steps > self.max_len:
-            raise ValueError(
+            raise RequestTooLarge(
                 f"decode window overflow: prompt_len={prompt_len} + "
                 f"steps={steps} = {prompt_len + steps} exceeds the "
                 f"engine's max_len={self.max_len}; re-create the engine "

@@ -1,0 +1,111 @@
+"""Typed exception hierarchy for the serving stack.
+
+PRs 3-5 signalled every overload and misuse with bare ``ValueError`` /
+``RuntimeError``, which callers cannot tell apart from a genuine bug —
+and a front-end that wants to *degrade* under load (queue, shed, retry)
+rather than crash needs to branch on what went wrong.  Everything the
+scheduler and the async front-end raise on purpose derives from
+:class:`SchedulerError`; the legacy builtin types are kept as secondary
+bases so existing ``except ValueError`` call sites (and the older
+regression pins) keep working.
+
+Two families:
+
+  * **scheduler errors** — raised by ``ContinuousBatchingScheduler`` /
+    ``ServeEngine`` on invalid or unservable requests and stuck loops.
+    ``PoolExhausted`` is *transient* (retry when capacity frees);
+    ``RequestTooLarge`` is permanent (the request can never fit this
+    engine).
+  * **front-end outcomes** — ``ServeFrontend`` never lets these escape
+    its serve loop; they are attached to per-request results
+    (``ServeResult.error``) so an overloaded trace completes with typed
+    reject/expire outcomes instead of an exception mid-flight.
+"""
+from __future__ import annotations
+
+
+class SchedulerError(Exception):
+    """Base for every intentional serving-stack failure."""
+
+
+class InvalidRequest(SchedulerError, ValueError):
+    """The request is malformed (empty prompt, max_tokens < 1,
+    duplicate rid) — a caller bug, never load-dependent."""
+
+
+class RequestTooLarge(InvalidRequest):
+    """The request can *never* be served by this engine: its token
+    window exceeds ``max_len`` or its KV-block footprint exceeds the
+    whole pool.  Re-create the engine bigger, or reject up front."""
+
+
+class PoolExhausted(SchedulerError, RuntimeError):
+    """A slot or KV-block allocation cannot be funded *right now*.
+
+    Transient by construction: capacity returns when running requests
+    retire, so the right reaction is to queue (what ``run`` does) or to
+    apply backpressure (what the front-end does) — not to crash."""
+
+
+class SchedulerStalled(SchedulerError, RuntimeError):
+    """The serve loop exceeded its dispatch budget (``max_steps``)
+    without draining — a scheduling bug or an adversarial trace."""
+
+
+# ---------------------------------------------------------------------------
+# Front-end outcomes (attached to ServeResult.error, never raised out of
+# the serve loop)
+# ---------------------------------------------------------------------------
+
+class FrontendError(SchedulerError):
+    """Base for per-request front-end outcomes."""
+
+
+class AdmissionRejected(FrontendError):
+    """The front-end refused to take the request.  ``reason`` carries
+    the machine-readable cause (``queue_full`` / ``shed`` /
+    ``too_large`` / ``closed``)."""
+
+    def __init__(self, message: str, reason: str = "rejected"):
+        super().__init__(message)
+        self.reason = reason
+
+
+class QueueFull(AdmissionRejected):
+    """The bounded admission queue is at ``max_queue``."""
+
+    def __init__(self, message: str):
+        super().__init__(message, reason="queue_full")
+
+
+class LoadShed(AdmissionRejected):
+    """Backpressure: queue depth or tail latency crossed the shedding
+    threshold, so new work is refused to protect running requests."""
+
+    def __init__(self, message: str):
+        super().__init__(message, reason="shed")
+
+
+class DeadlineExceeded(FrontendError):
+    """The request's deadline passed — in queue (never admitted) or
+    mid-decode (cancelled with a partial, ``truncated`` completion)."""
+
+
+class RequestCancelled(FrontendError):
+    """The caller (or a drain/preemption) cancelled the request."""
+
+
+class FaultInjected(FrontendError):
+    """A chaos-policy fault.  ``rid`` is the victim request (``None``
+    for a whole-step transient fault that harmed no one), ``point`` the
+    injection site (``decode`` / ``chunk``).  Always retryable."""
+
+    def __init__(self, message: str, rid: int | None = None,
+                 point: str = "decode"):
+        super().__init__(message)
+        self.rid = rid
+        self.point = point
+
+
+class RetriesExhausted(FrontendError):
+    """A retryable failure recurred past ``RetryPolicy.max_retries``."""

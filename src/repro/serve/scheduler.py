@@ -32,6 +32,32 @@ kinds of work:
 The host loop is plain Python (admission order, arrival times, harvest);
 everything per-token is inside the one jitted step.
 
+Step-wise driving (PR 7)
+------------------------
+``run`` is a convenience loop over four public primitives an external
+driver (``serve.frontend.ServeFrontend``) can call directly:
+
+  * :meth:`start_request` — admit ONE request into a free slot (typed
+    ``PoolExhausted`` when it cannot be funded right now);
+  * :meth:`tick` — advance the engine by one scheduler iteration
+    (prefill chunks + at most one decode dispatch), returning per-token
+    events for streaming, harvested completions, and dispatch counts;
+  * :meth:`cancel` — retire a request mid-flight (mid-prefill or
+    mid-decode), freeing its slot and KV blocks; co-batched requests
+    are untouched (their lanes were already isolated by the active
+    mask / trash-block table masking / recurrent-row freezing);
+  * :meth:`drain` — cancel everything in flight, returning partial
+    ``Completion``s flagged ``truncated=True`` so teardown never
+    silently loses work.
+
+``tick`` accepts a ``fault_hook`` called at each injection point
+(before every chunk-prefill dispatch and before the decode dispatch)
+that may raise :class:`~repro.serve.errors.FaultInjected`; the hooks
+run *before* any host-side state mutation for that dispatch, so a
+raised fault always leaves the slot state machine consistent — the
+chaos suite (``tests/test_chaos.py``) proves survivors stay
+bit-identical and no blocks leak under seeded fault storms.
+
 Paged KV cache + chunked prefill
 --------------------------------
 With ``kv_block_size > 0`` the attention KV state is no longer a private
@@ -82,7 +108,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from collections.abc import Sequence
+from collections.abc import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +118,8 @@ from repro.config import ModelConfig
 from repro.models import lm
 from repro.serve import kv_pool
 from repro.serve.engine import ServeEngine, make_decode_step, sample_token
+from repro.serve.errors import (InvalidRequest, PoolExhausted,
+                                RequestTooLarge, SchedulerStalled)
 
 
 # ---------------------------------------------------------------------------
@@ -106,6 +134,14 @@ class Request:
     invisible to admission before that step (synthetic arrival traces).
     ``eos_id < 0`` disables EOS termination; ``max_tokens`` counts every
     generated token, including the EOS itself.
+
+    The last three fields are front-end metadata the scheduler itself
+    ignores: ``arrival_time`` is the wall-clock arrival in seconds
+    (Poisson traces for the async front-end), ``priority`` orders the
+    admission queue under the ``priority`` policy (higher first), and
+    ``deadline_ms`` is the per-request latency budget the front-end
+    enforces (queued past it → expired; decoding past it → cancelled
+    with a partial completion).
     """
     prompt: Sequence[int]
     max_tokens: int
@@ -114,6 +150,9 @@ class Request:
     seed: int = 0
     arrival: int = 0
     rid: int | None = None
+    arrival_time: float | None = None
+    priority: int = 0
+    deadline_ms: float | None = None
 
 
 @dataclasses.dataclass
@@ -121,9 +160,32 @@ class Completion:
     rid: int
     prompt: list[int]
     tokens: list[int]                  # generated tokens, EOS included
-    finish_reason: str                 # "eos" | "length"
+    finish_reason: str                 # "eos" | "length" | a partial
+    #                                    reason ("cancelled" / "expired"
+    #                                    / "fault" / "truncated")
     admitted_step: int                 # scheduler step of admission
     finished_step: int                 # scheduler step of the last token
+    truncated: bool = False            # True = retired before its natural
+    #                                    EOS/length finish (cancel, drain,
+    #                                    deadline, injected fault)
+
+
+@dataclasses.dataclass
+class TickResult:
+    """What one scheduler iteration produced.
+
+    ``events`` are per-token streaming records ``(rid, index, token)``
+    — ``index`` is the position in the request's generated-token list,
+    so a driver that re-runs a request after a fault can dedupe the
+    (bit-identical) regenerated prefix.  ``completions`` are requests
+    that retired this tick; ``dispatches`` counts jitted calls (the
+    runaway guard's currency); ``decoded`` says whether the slot-wise
+    decode step ran.
+    """
+    events: list[tuple[int, int, int]]
+    completions: dict[int, Completion]
+    dispatches: int
+    decoded: bool
 
 
 @dataclasses.dataclass
@@ -218,7 +280,9 @@ class ContinuousBatchingScheduler:
     Wraps a :class:`ServeEngine` (shared prepacked params, jitted
     prefill) and adds the slot pool + host admission loop.  ``run`` is
     re-entrant: all slots drain before it returns, so one scheduler
-    serves many traces (and the jitted step/prefill stay warm).
+    serves many traces (and the jitted step/prefill stay warm).  An
+    external driver can instead call ``start_request`` / ``tick`` /
+    ``cancel`` / ``drain`` directly (the async front-end does).
 
     ``kv_block_size > 0`` switches the attention KV state from
     per-slot contiguous windows to the shared paged block pool
@@ -309,6 +373,7 @@ class ContinuousBatchingScheduler:
         self._slot_req: list[Request | None] = [None] * b
         self._slot_toks: list[list[int]] = [[] for _ in range(b)]
         self._slot_admitted = np.zeros((b,), np.int64)
+        self._events: list[tuple[int, int, int]] = []
 
     @staticmethod
     def _insert_impl(full_states, one_states, slot):
@@ -348,10 +413,101 @@ class ContinuousBatchingScheduler:
         return kv_pool.blocks_needed(len(req.prompt), req.max_tokens,
                                      self.block_size)
 
+    def blocks_needed(self, req: Request) -> int:
+        """KV blocks ``req`` would own for its lifetime (0 on the
+        contiguous layout or for pure-recurrent stacks) — the front-end's
+        cost-aware admission reads this against ``free_blocks``."""
+        return self._blocks_for(req) if self.paged else 0
+
+    def validate_request(self, req: Request) -> None:
+        """Typed up-front validation: :class:`InvalidRequest` for
+        malformed requests, :class:`RequestTooLarge` for requests that
+        can never be served by this engine (window / pool capacity)."""
+        if len(req.prompt) < 1:
+            raise InvalidRequest(f"request {req.rid}: empty prompt")
+        if req.max_tokens < 1:
+            raise InvalidRequest(
+                f"request {req.rid}: max_tokens must be >= 1, "
+                f"got {req.max_tokens}")
+        self.engine._check_window(len(req.prompt), req.max_tokens)
+        if self.paged:
+            need = self._blocks_for(req)
+            if need > self.num_kv_blocks:
+                raise RequestTooLarge(
+                    f"request {req.rid}: prompt_len={len(req.prompt)} + "
+                    f"max_tokens={req.max_tokens} needs {need} KV "
+                    f"blocks, exceeding the pool capacity of "
+                    f"{self.num_kv_blocks} blocks "
+                    f"({self.num_kv_blocks * self.block_size} "
+                    f"positions); re-create the scheduler with "
+                    f"num_kv_blocks >= {need}")
+
+    def _free_slot(self) -> int | None:
+        for slot in range(self.num_slots):
+            if not self._active[slot] and self._slot_req[slot] is None:
+                return slot
+        return None
+
+    @property
+    def num_free_slots(self) -> int:
+        return sum(not self._active[s] and self._slot_req[s] is None
+                   for s in range(self.num_slots))
+
+    @property
+    def free_blocks(self) -> int:
+        """Unallocated KV blocks (the whole pool when contiguous —
+        admission is then slot-bound only)."""
+        return self._alloc.free_blocks if self.paged else 0
+
+    @property
+    def total_blocks(self) -> int:
+        return self.num_kv_blocks if self.paged else 0
+
+    def can_fund(self, req: Request) -> bool:
+        """Whether admission could succeed *right now* (a free slot and,
+        when paged, enough free blocks).  Purely advisory — the pool
+        only moves when ``start_request`` commits."""
+        if self._free_slot() is None:
+            return False
+        if self.paged:
+            return self._alloc.can_alloc(self._blocks_for(req))
+        return True
+
+    def in_flight(self) -> list[int]:
+        """rids currently holding a slot (decoding or mid-prefill)."""
+        return [req.rid for req in self._slot_req if req is not None]
+
+    def start_request(self, req: Request, step: int = 0,
+                      ) -> Completion | None:
+        """Admit ONE request into a free slot.
+
+        Returns an instant :class:`Completion` when the request finishes
+        at prefill already (EOS on the first token / ``max_tokens == 1``
+        on the contiguous path), else ``None`` — the request now owns a
+        slot and will produce ``tick`` events.  Raises
+        :class:`PoolExhausted` when no slot or (paged) no blocks can
+        fund it right now, and the validation errors of
+        :meth:`validate_request`.
+        """
+        self.validate_request(req)
+        slot = self._free_slot()
+        if slot is None:
+            raise PoolExhausted(
+                f"request {req.rid}: all {self.num_slots} decode slots "
+                f"are occupied")
+        if self.paged:
+            if not self._admit_paged(slot, req, step):
+                raise PoolExhausted(
+                    f"request {req.rid}: needs {self._blocks_for(req)} KV "
+                    f"blocks, pool has {self._alloc.free_blocks} free")
+            return None
+        return self._admit(slot, req, step)
+
     def _admit(self, slot: int, req: Request, step: int,
-               out: dict[int, Completion]) -> bool:
-        """Prefill ``req`` into ``slot``.  Returns True if the request
-        occupies the slot (False: it completed at prefill already)."""
+               ) -> Completion | None:
+        """Prefill ``req`` into ``slot``.  Returns the instant
+        completion when it finished at prefill already (the slot stays
+        free), else None (the request occupies the slot)."""
         prompt = list(int(t) for t in req.prompt)
         s = len(prompt)
         states1, logits, _ = self.engine.prefill(
@@ -361,9 +517,7 @@ class ContinuousBatchingScheduler:
 
         if tok0 == req.eos_id or req.max_tokens == 1:
             reason = "eos" if tok0 == req.eos_id else "length"
-            out[req.rid] = Completion(req.rid, prompt, [tok0], reason,
-                                      step, step)
-            return False
+            return Completion(req.rid, prompt, [tok0], reason, step, step)
 
         with self.engine.mesh_ctx():
             self.states = self._insert(self.states, states1,
@@ -379,7 +533,8 @@ class ContinuousBatchingScheduler:
         self._slot_req[slot] = req
         self._slot_toks[slot] = [tok0]
         self._slot_admitted[slot] = step
-        return True
+        self._events.append((req.rid, 0, tok0))
+        return None
 
     def _admit_paged(self, slot: int, req: Request, step: int) -> bool:
         """Claim ``slot`` and the request's KV blocks; prefill happens
@@ -412,15 +567,24 @@ class ContinuousBatchingScheduler:
             self._slot_blocks[slot] = []
         self._block_table[slot, :] = 0
 
-    def _feed_prefills(self, step: int, out: dict[int, Completion]) -> int:
+    def _feed_prefills(self, step: int, out: dict[int, Completion],
+                       fault_hook: Callable[[str, int | None], None]
+                       | None = None) -> int:
         """Advance every mid-prefill slot by one chunk (``block_size``
         tokens when chunked, the whole prompt otherwise).  A slot whose
         final chunk lands samples its first token and either joins the
         decode batch or completes instantly (EOS at prefill /
-        max_tokens=1) and retires.  Returns dispatches performed."""
+        max_tokens=1) and retires.  Returns dispatches performed.
+
+        ``fault_hook`` fires before each chunk dispatch (injection
+        point ``"chunk"`` with the victim rid); a raise propagates with
+        the slot's job untouched — earlier slots' chunks this tick
+        already landed and stay consistent."""
         dispatches = 0
         for slot in sorted(self._prefills):
             pf = self._prefills[slot]
+            if fault_hook is not None:
+                fault_hook("chunk", pf.req.rid)
             chunk = self.block_size if self.chunked_prefill \
                 else len(pf.prompt)
             c = min(chunk, len(pf.prompt) - pf.pos)
@@ -460,100 +624,30 @@ class ContinuousBatchingScheduler:
             self._gen[slot] = 1
             self._max_toks[slot] = req.max_tokens
             self._slot_toks[slot] = [tok0]
+            self._events.append((req.rid, 0, tok0))
         return dispatches
 
-    # -- the serve loop ----------------------------------------------------
+    # -- step-wise driving -------------------------------------------------
 
-    def run(self, requests: Sequence[Request],
-            max_steps: int = 100_000) -> dict[int, Completion]:
-        """Serve a trace of requests to completion.
+    def tick(self, step: int = 0,
+             fault_hook: Callable[[str, int | None], None] | None = None,
+             ) -> TickResult:
+        """One scheduler iteration: feed every mid-prefill slot a chunk,
+        then run the slot-wise decode step if any slot is live.
 
-        Requests are admitted FIFO within arrival order as slots free
-        up.  Returns ``{rid: Completion}``; rids are assigned by
-        position for requests that don't carry one.
+        ``fault_hook(point, rid)`` is called before each jitted dispatch
+        (``"chunk"`` per prefill slot, ``"decode"`` once) and may raise
+        — by construction no host-side slot state has been mutated for
+        that dispatch yet, so the state machine stays consistent and the
+        driver can cancel/retry the victim and simply tick again.
         """
-        taken = {r.rid for r in requests if r.rid is not None}
-        if len(taken) != sum(r.rid is not None for r in requests):
-            raise ValueError("duplicate request rids")
-        reqs = []
-        next_rid = 0
-        for r in requests:
-            if r.rid is None:      # auto-assign, skipping explicit rids
-                while next_rid in taken:
-                    next_rid += 1
-                r = dataclasses.replace(r, rid=next_rid)
-                taken.add(next_rid)
-            reqs.append(r)
-        # validate the WHOLE trace before admitting anything: a raise
-        # mid-run would strand live slots and lose the completed work
-        # (`run` is re-entrant; stranded slots would leak into the next
-        # trace's results)
-        for r in reqs:
-            if len(r.prompt) < 1:
-                raise ValueError(f"request {r.rid}: empty prompt")
-            if r.max_tokens < 1:
-                raise ValueError(
-                    f"request {r.rid}: max_tokens must be >= 1, "
-                    f"got {r.max_tokens}")
-            self.engine._check_window(len(r.prompt), r.max_tokens)
-            if self.paged:
-                need = self._blocks_for(r)
-                if need > self.num_kv_blocks:
-                    raise ValueError(
-                        f"request {r.rid}: prompt_len={len(r.prompt)} + "
-                        f"max_tokens={r.max_tokens} needs {need} KV "
-                        f"blocks, exceeding the pool capacity of "
-                        f"{self.num_kv_blocks} blocks "
-                        f"({self.num_kv_blocks * self.block_size} "
-                        f"positions); re-create the scheduler with "
-                        f"num_kv_blocks >= {need}")
-        pending = deque(sorted(reqs, key=lambda r: r.arrival))
-        ready: deque = deque()
         out: dict[int, Completion] = {}
-        step = 0               # simulated clock (jumps over idle gaps)
-        work_steps = 0         # decode/prefill dispatches performed
-
-        while pending or ready or self._prefills or self._active.any():
-            if work_steps > max_steps:
-                raise RuntimeError(
-                    f"scheduler exceeded max_steps={max_steps}")
-            while pending and pending[0].arrival <= step:
-                ready.append(pending.popleft())
-            if self.paged:
-                for slot in range(self.num_slots):
-                    if not ready:
-                        break
-                    if (self._active[slot] or slot in self._prefills
-                            or self._slot_req[slot] is not None):
-                        continue
-                    # FIFO: if the pool can't fund the head request yet,
-                    # nothing behind it jumps the queue
-                    if not self._admit_paged(slot, ready[0], step):
-                        break
-                    ready.popleft()
-                work_steps += self._feed_prefills(step, out)
-            else:
-                for slot in range(self.num_slots):
-                    # retry the same slot after an instant completion
-                    # (EOS at prefill / max_tokens=1 never occupy it)
-                    while ready and not self._active[slot]:
-                        self._admit(slot, ready.popleft(), step, out)
-
-            if not self._active.any():
-                if self._prefills:
-                    # prompts are still streaming in; no decode to run
-                    # this iteration, but the clock advances
-                    step += 1
-                    continue
-                # nothing decoding (the admission pass drained `ready`):
-                # jump time to the next arrival
-                if pending:
-                    step = max(step + 1, pending[0].arrival)
-                    continue
-                break
-
+        dispatches = self._feed_prefills(step, out, fault_hook)
+        decoded = False
+        if self._active.any():
+            if fault_hook is not None:
+                fault_hook("decode", None)
             was_active = self._active.copy()
-            work_steps += 1
             step_args = (self.params, self.states, self._cur_tok,
                          self._cache_index, self._keys, self._active,
                          self._temp, self._eos, self._gen, self._max_toks)
@@ -575,9 +669,12 @@ class ContinuousBatchingScheduler:
             done = np.asarray(done)
 
             for slot in np.nonzero(was_active)[0]:
+                req = self._slot_req[slot]
                 self._slot_toks[slot].append(int(tok[slot]))
+                self._events.append((req.rid,
+                                     len(self._slot_toks[slot]) - 1,
+                                     int(tok[slot])))
                 if done[slot]:
-                    req = self._slot_req[slot]
                     reason = ("eos" if int(tok[slot]) == req.eos_id
                               else "length")
                     out[req.rid] = Completion(
@@ -588,6 +685,126 @@ class ContinuousBatchingScheduler:
                     self._slot_toks[slot] = []
                     if self.paged:
                         self._retire_paged_slot(slot)
+            decoded = True
+            dispatches += 1
+        events, self._events = self._events, []
+        return TickResult(events, out, dispatches, decoded)
+
+    def _slot_of(self, rid: int) -> int | None:
+        for slot, req in enumerate(self._slot_req):
+            if req is not None and req.rid == rid:
+                return slot
+        return None
+
+    def cancel(self, rid: int, step: int = 0,
+               reason: str = "cancelled") -> Completion | None:
+        """Retire request ``rid`` mid-flight: deactivate its lane, free
+        its slot and KV blocks, and return the partial completion
+        (``truncated=True``; tokens generated so far, possibly none for
+        a mid-prefill request).  Returns None if ``rid`` is not in
+        flight.
+
+        Co-batched requests are untouched — the cancelled row's lane
+        was already isolated per step (active-masked bookkeeping,
+        trash-routed KV writes via the zeroed table row, frozen
+        recurrent rows), and slot reuse re-initialises state exactly as
+        a natural retirement does.
+        """
+        slot = self._slot_of(rid)
+        if slot is None:
+            return None
+        req = self._slot_req[slot]
+        tokens = list(self._slot_toks[slot])
+        self._active[slot] = False
+        self._slot_req[slot] = None
+        self._slot_toks[slot] = []
+        self._prefills.pop(slot, None)
+        if self.paged:
+            self._retire_paged_slot(slot)
+        return Completion(req.rid, list(int(t) for t in req.prompt),
+                          tokens, reason, int(self._slot_admitted[slot]),
+                          step, truncated=True)
+
+    def drain(self, step: int = 0) -> dict[int, Completion]:
+        """Retire every in-flight request, returning their partial
+        ``Completion``s flagged ``truncated=True`` (finish reason
+        ``"truncated"``) — teardown never silently loses accepted work.
+        The caller is responsible for stopping admission first; after
+        ``drain`` all slots and KV blocks are free and the scheduler
+        serves the next trace cleanly."""
+        out: dict[int, Completion] = {}
+        for rid in self.in_flight():
+            comp = self.cancel(rid, step, reason="truncated")
+            if comp is not None:
+                out[rid] = comp
+        return out
+
+    # -- the serve loop ----------------------------------------------------
+
+    def run(self, requests: Sequence[Request],
+            max_steps: int = 100_000) -> dict[int, Completion]:
+        """Serve a trace of requests to completion.
+
+        Requests are admitted FIFO within arrival order as slots free
+        up.  Returns ``{rid: Completion}``; rids are assigned by
+        position for requests that don't carry one.
+        """
+        taken = {r.rid for r in requests if r.rid is not None}
+        if len(taken) != sum(r.rid is not None for r in requests):
+            raise InvalidRequest("duplicate request rids")
+        reqs = []
+        next_rid = 0
+        for r in requests:
+            if r.rid is None:      # auto-assign, skipping explicit rids
+                while next_rid in taken:
+                    next_rid += 1
+                r = dataclasses.replace(r, rid=next_rid)
+                taken.add(next_rid)
+            reqs.append(r)
+        # validate the WHOLE trace before admitting anything: a raise
+        # mid-run would strand live slots and lose the completed work
+        # (`run` is re-entrant; stranded slots would leak into the next
+        # trace's results)
+        for r in reqs:
+            self.validate_request(r)
+        pending = deque(sorted(reqs, key=lambda r: r.arrival))
+        ready: deque = deque()
+        out: dict[int, Completion] = {}
+        step = 0               # simulated clock (jumps over idle gaps)
+        work_steps = 0         # decode/prefill dispatches performed
+
+        while pending or ready or self._prefills or self._active.any():
+            if work_steps > max_steps:
+                raise SchedulerStalled(
+                    f"scheduler exceeded max_steps={max_steps}")
+            while pending and pending[0].arrival <= step:
+                ready.append(pending.popleft())
+            # FIFO admission: if the pool can't fund the head request
+            # yet, nothing behind it jumps the queue
+            while ready:
+                if self.paged and not self.can_fund(ready[0]):
+                    break
+                if self._free_slot() is None:
+                    break
+                comp = self.start_request(ready.popleft(), step)
+                if comp is not None:       # finished at prefill already
+                    out[comp.rid] = comp
+
+            res = self.tick(step)
+            work_steps += res.dispatches
+            out.update(res.completions)
+            if not res.decoded:
+                if self._prefills:
+                    # prompts are still streaming in; no decode to run
+                    # this iteration, but the clock advances
+                    step += 1
+                    continue
+                # nothing decoding (the admission pass drained `ready`):
+                # jump time to the next arrival
+                if pending:
+                    step = max(step + 1, pending[0].arrival)
+                    continue
+                break
             step += 1
         return out
 
@@ -608,18 +825,37 @@ def synthetic_workload(n_requests: int, vocab_size: int, *,
                        mean_interarrival: float = 0.0,
                        temperature_choices: Sequence[float] = (0.0, 0.7),
                        eos_rate: float = 0.25, seed: int = 0,
+                       poisson_rate: float = 0.0,
+                       priority_choices: Sequence[int] = (0,),
+                       deadline_ms: float | None = None,
                        ) -> list[Request]:
     """A seeded trace of requests with varied lengths/arrivals.
 
-    ``mean_interarrival`` is in decode steps (0 = a burst at t=0);
-    ``eos_rate`` is the fraction of requests given a random EOS id (which
-    may or may not ever be sampled — both paths are exercised).
+    Two arrival modes share this one generator (so the scheduler's step
+    traces, the front-end's latency-under-load benches, and the chaos
+    suite all draw from the same distribution):
+
+      * ``mean_interarrival`` (legacy, in decode *steps*; 0 = a burst
+        at t=0) — exponential gaps truncated to integer step indices,
+        for ``ContinuousBatchingScheduler.run``'s simulated clock;
+      * ``poisson_rate`` (requests per *second*, overrides the above) —
+        a true Poisson arrival process: ``arrival_time`` carries the
+        float wall-clock arrival for the async front-end, and
+        ``arrival`` its integer-step shadow so the same trace still
+        runs through ``run``.
+
+    ``eos_rate`` is the fraction of requests given a random EOS id
+    (which may or may not ever be sampled — both paths are exercised);
+    ``priority_choices``/``deadline_ms`` stamp the front-end metadata
+    fields uniformly at random / uniformly on all requests.
     """
     rng = np.random.default_rng(seed)
     t = 0.0
     reqs = []
     for i in range(n_requests):
-        if mean_interarrival > 0:
+        if poisson_rate > 0:
+            t += rng.exponential(1.0 / poisson_rate)
+        elif mean_interarrival > 0:
             t += rng.exponential(mean_interarrival)
         plen = int(rng.integers(1, max_prompt + 1))
         eos = int(rng.integers(0, vocab_size)) \
@@ -629,7 +865,10 @@ def synthetic_workload(n_requests: int, vocab_size: int, *,
             max_tokens=int(rng.integers(1, max_new + 1)),
             temperature=float(rng.choice(list(temperature_choices))),
             eos_id=eos, seed=int(rng.integers(0, 2**31 - 1)),
-            arrival=int(t), rid=i))
+            arrival=int(t), rid=i,
+            arrival_time=float(t) if poisson_rate > 0 else None,
+            priority=int(rng.choice(list(priority_choices))),
+            deadline_ms=deadline_ms))
     return reqs
 
 

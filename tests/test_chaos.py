@@ -1,0 +1,201 @@
+"""Fault-injection suite: the scheduler's state machine survives chaos.
+
+The bar (ISSUE 7): under seeded injection of slot-step failures,
+chunk-prefill failures, victim cancellations, and admission stalls,
+
+  * every *surviving* (status ``ok``) request is bit-identical to its
+    solo ``generate_loop`` oracle — co-batched victims never corrupt
+    survivors' lanes;
+  * the allocator's invariants hold afterwards: no leaked blocks, no
+    double-assignment, block tables scrubbed, free list whole;
+  * the same seed replays the same outcome, token for token (the chaos
+    RNG, retry-jitter RNG, and virtual clock are all deterministic);
+  * retried requests never duplicate tokens on their stream (decode is
+    deterministic, so the regenerated prefix is identical and the
+    handle's watermark drops it).
+
+Run via ``make test-chaos`` (a fixed seed matrix; also a CI step).
+"""
+import jax
+import pytest
+
+from repro.config import small_test_config
+from repro.models import lm
+from repro.serve import (ChaosPolicy, ContinuousBatchingScheduler, Request,
+                         RetryPolicy, ServeFrontend, VirtualClock,
+                         oracle_completion, synthetic_workload)
+
+_SCHED_CACHE = {}
+
+# the fixed seed matrix `make test-chaos` runs (keep in sync with the
+# parametrize below; small on purpose — each seed is a full serve trace)
+CHAOS_SEEDS = (0, 1, 2, 3)
+
+STORM = dict(decode_fault_rate=0.10, victim_fault_rate=0.08,
+             chunk_fault_rate=0.08, stall_rate=0.08, stall_ticks=2)
+
+
+def _sched(key="paged"):
+    if key not in _SCHED_CACHE:
+        cfg = small_test_config()
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        kw = dict(num_slots=2, max_len=32, kv_block_size=4,
+                  num_kv_blocks=12, chunked_prefill=True)
+        if key == "contig":
+            kw = dict(num_slots=2, max_len=32)
+        _SCHED_CACHE[key] = ContinuousBatchingScheduler(cfg, params, **kw)
+    return _SCHED_CACHE[key]
+
+
+def _assert_allocator_invariants(sched):
+    """No leaked blocks, no double-assign, tables scrubbed."""
+    assert sched.in_flight() == [] and not sched._prefills
+    assert not sched._active.any()
+    if not sched.paged:
+        return
+    alloc = sched._alloc
+    assert alloc.live_blocks == 0
+    free = list(alloc._free) if hasattr(alloc, "_free") else None
+    if free is not None:
+        assert sorted(free) == list(range(1, sched.num_kv_blocks + 1))
+        assert len(set(free)) == len(free)          # no double-entry
+    assert (sched._block_table == 0).all()
+    assert all(not b for b in sched._slot_blocks)
+
+
+def _run_storm(sched, seed, *, n=10, retry=None, policy=None):
+    fe = ServeFrontend(
+        sched, clock=VirtualClock(), max_queue=16,
+        retry=retry or RetryPolicy(max_retries=4, backoff_s=0.02, seed=seed),
+        chaos=policy or ChaosPolicy(seed=seed, **STORM))
+    trace = synthetic_workload(n, small_test_config().vocab_size,
+                               max_prompt=6, max_new=8, eos_rate=0.3,
+                               poisson_rate=150.0, seed=seed + 100)
+    handles = fe.serve_trace(trace)
+    return fe, trace, handles, fe.results(handles)
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_survivors_bit_identical_and_no_leaks_under_storm(seed):
+    sched = _sched()
+    fe, trace, handles, res = _run_storm(sched, seed)
+    assert set(res) == {r.rid for r in trace}
+    by_rid = {r.rid: r for r in trace}
+    n_ok = 0
+    for rid, r in res.items():
+        assert r.status in ("ok", "failed", "expired", "rejected",
+                            "cancelled")
+        if r.status == "ok":
+            n_ok += 1
+            assert r.tokens == oracle_completion(sched.engine, by_rid[rid])
+        elif r.status == "failed":
+            # only retry exhaustion fails a request under chaos
+            assert r.attempts > fe.cfg.retry.max_retries
+    assert n_ok > 0                       # the storm is survivable
+    _assert_allocator_invariants(sched)
+    snap = fe.metrics.snapshot()
+    if fe.chaos.injected:
+        assert snap["serve.faults"] + snap["serve.stalls"] > 0
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS[:2])
+def test_same_seed_replays_bit_identically(seed):
+    sched = _sched()
+    _, _, h1, res1 = _run_storm(sched, seed)
+    _, _, h2, res2 = _run_storm(sched, seed)
+    assert set(res1) == set(res2)
+    for rid in res1:
+        assert res1[rid].status == res2[rid].status, rid
+        assert res1[rid].tokens == res2[rid].tokens, rid
+        assert res1[rid].attempts == res2[rid].attempts, rid
+    _assert_allocator_invariants(sched)
+
+
+def test_retried_requests_never_duplicate_stream_tokens():
+    """A victim retried from scratch regenerates its (deterministic)
+    prefix; the handle's watermark must swallow the replay."""
+    sched = _sched()
+    retried_ok = 0
+    for seed in CHAOS_SEEDS:
+        fe, trace, handles, res = _run_storm(
+            sched, seed,
+            policy=ChaosPolicy(seed=seed, victim_fault_rate=0.25),
+            retry=RetryPolicy(max_retries=6, backoff_s=0.01, seed=seed))
+        by_rid = {r.rid: r for r in trace}
+        for rid, r in res.items():
+            if r.status != "ok":
+                continue
+            streamed = []
+            h = handles[rid]
+            while not h._stream.empty():
+                t = h._stream.get_nowait()
+                if t is not None:
+                    streamed.append(t)
+            want = oracle_completion(sched.engine, by_rid[rid])
+            assert streamed == want, (seed, rid)      # no dupes, no gaps
+            if r.attempts > 0:
+                retried_ok += 1
+        _assert_allocator_invariants(sched)
+    assert retried_ok > 0         # the interesting path actually ran
+
+
+def test_admission_stall_applies_backpressure_not_crash():
+    """With admission frozen solid, queued work expires/sheds — typed —
+    and nothing is ever admitted."""
+    sched = _sched()
+    fe = ServeFrontend(sched, clock=VirtualClock(), max_queue=4,
+                       default_deadline_ms=150.0,
+                       chaos=ChaosPolicy(seed=0, stall_rate=1.0,
+                                         stall_ticks=10_000))
+    trace = [Request([1, 2, 3], max_tokens=4, seed=i, rid=i)
+             for i in range(6)]
+    res = fe.results(fe.serve_trace(trace))
+    assert all(r.status in ("expired", "rejected") for r in res.values())
+    snap = fe.metrics.snapshot()
+    assert snap["serve.admitted"] == 0 and snap["serve.stalls"] > 0
+    assert snap["serve.expired"] > 0
+    _assert_allocator_invariants(sched)
+
+
+def test_victimless_decode_fault_is_a_pure_retry():
+    """A transient decode fault harms nobody: the tick simply re-runs
+    and every request still completes oracle-identically, attempts=0."""
+    sched = _sched()
+    fe, trace, handles, res = _run_storm(
+        sched, 0, policy=ChaosPolicy(seed=0, decode_fault_rate=0.3))
+    by_rid = {r.rid: r for r in trace}
+    assert all(r.status == "ok" and r.attempts == 0 for r in res.values())
+    for rid, r in res.items():
+        assert r.tokens == oracle_completion(sched.engine, by_rid[rid])
+    assert fe.chaos.injected > 0
+    _assert_allocator_invariants(sched)
+
+
+def test_chunk_faults_on_contiguous_layout_are_harmless():
+    """The contiguous scheduler has no chunk dispatches; a policy full
+    of chunk faults degenerates to a clean run."""
+    sched = _sched("contig")
+    fe, trace, handles, res = _run_storm(
+        sched, 1, policy=ChaosPolicy(seed=1, chunk_fault_rate=0.9))
+    by_rid = {r.rid: r for r in trace}
+    assert all(r.status == "ok" for r in res.values())
+    for rid, r in res.items():
+        assert r.tokens == oracle_completion(sched.engine, by_rid[rid])
+    _assert_allocator_invariants(sched)
+
+
+def test_chaos_policy_parse_roundtrip():
+    p = ChaosPolicy.parse(
+        "seed=7,fault=0.05,victim=0.02,chunk=0.1,stall=0.2,"
+        "stall_ticks=5,latency_ms=40")
+    assert p.seed == 7 and p.decode_fault_rate == 0.05
+    assert p.victim_fault_rate == 0.02 and p.chunk_fault_rate == 0.1
+    assert p.stall_rate == 0.2 and p.stall_ticks == 5
+    assert p.step_latency_s == 0.04 and p.latency_rate == 1.0
+    assert p.enabled
+    assert not ChaosPolicy.parse("off").enabled
+    assert not ChaosPolicy.parse("").enabled
+    with pytest.raises(ValueError, match="unknown chaos key"):
+        ChaosPolicy.parse("explode=1.0")
+    with pytest.raises(ValueError, match="k=v"):
+        ChaosPolicy.parse("fault")

@@ -7,7 +7,7 @@ use tmp_path; nothing here sleeps.
 import pytest
 
 from repro.ft.monitor import (Counter, Gauge, HeartbeatMonitor,
-                              MetricsRegistry, StragglerDetector)
+                              MetricsRegistry, StragglerDetector, Summary)
 
 
 # ---------------------------------------------------------------------------
@@ -57,6 +57,39 @@ def test_snapshot_is_flat_sorted_and_detached():
     snap["a.count"] = 999                      # a copy, not a view
     assert reg.snapshot()["a.count"] == 3.0
     assert reg.names() == ["a.count", "b.gauge"]
+
+
+def test_summary_percentiles_and_window():
+    s = Summary("ttft", window=4)
+    assert s.percentile(0.5) == 0.0            # empty reports 0.0
+    for v in (10.0, 20.0, 30.0, 40.0):
+        s.observe(v)
+    assert s.percentile(0.0) == 10.0
+    assert s.percentile(0.5) == 30.0           # nearest-rank
+    assert s.percentile(0.99) == 40.0
+    assert s.value == s.percentile(0.5)
+    s.observe(1000.0)                          # evicts the oldest (10.0)
+    assert s.percentile(0.99) == 1000.0
+    assert s.percentile(0.0) == 20.0
+    assert s.count == 5                        # lifetime, not window
+
+
+def test_summary_snapshot_expands_sorted_rows():
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    reg.summary("m.lat").observe(7.0)
+    reg.gauge("z").set(1)
+    snap = reg.snapshot()
+    assert list(snap) == ["a", "m.lat_count", "m.lat_p50", "m.lat_p99",
+                          "z"]                 # still globally sorted
+    assert snap["m.lat_count"] == 1.0
+    assert snap["m.lat_p50"] == 7.0 == snap["m.lat_p99"]
+    # idempotent re-registration, kind conflicts rejected
+    assert reg.summary("m.lat") is reg.summary("m.lat")
+    with pytest.raises(ValueError):
+        reg.summary("a")
+    with pytest.raises(ValueError):
+        reg.counter("m.lat")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,138 @@
+"""First-class coverage for ft/preemption.py (dormant since PR 1).
+
+The handler's contract: SIGTERM/SIGINT set a thread-safe stop flag the
+trainer polls each step (checkpoint-and-exit inside the grace window);
+install/uninstall round-trips the process signal table; installation
+from a non-main thread degrades to programmatic-only triggering instead
+of raising.  The end-to-end test proves the whole promise: a training
+run killed by an actual signal resumes from its checkpoint and lands on
+bit-identical parameters to an uninterrupted run.
+"""
+import signal
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig, small_test_config
+from repro.ft import PreemptionHandler
+from repro.train.trainer import Trainer
+
+
+# ---------------------------------------------------------------------------
+# Signal plumbing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sig", [signal.SIGTERM, signal.SIGINT])
+def test_real_signal_sets_should_stop(sig):
+    h = PreemptionHandler()                       # installs both handlers
+    try:
+        assert not h.should_stop
+        signal.raise_signal(sig)
+        assert h.should_stop
+    finally:
+        h.uninstall()
+
+
+def test_install_uninstall_roundtrips_signal_table():
+    prev_term = signal.getsignal(signal.SIGTERM)
+    prev_int = signal.getsignal(signal.SIGINT)
+    h = PreemptionHandler()
+    assert signal.getsignal(signal.SIGTERM) == h._on_signal
+    assert signal.getsignal(signal.SIGINT) == h._on_signal
+    h.uninstall()
+    assert signal.getsignal(signal.SIGTERM) == prev_term
+    assert signal.getsignal(signal.SIGINT) == prev_int
+    # uninstall is idempotent (nothing left to restore)
+    h.uninstall()
+    assert signal.getsignal(signal.SIGTERM) == prev_term
+
+
+def test_repeated_signals_and_request_stop_are_idempotent():
+    h = PreemptionHandler(install=False)
+    h.request_stop()
+    h.request_stop()
+    assert h.should_stop
+
+
+def test_install_from_non_main_thread_degrades_gracefully():
+    """CPython only allows signal() in the main thread; the handler
+    swallows that (ValueError) so worker-thread construction still
+    yields a usable programmatic handler."""
+    prev = signal.getsignal(signal.SIGTERM)
+    out = {}
+
+    def build():
+        out["h"] = PreemptionHandler()            # install=True, no raise
+
+    t = threading.Thread(target=build)
+    t.start()
+    t.join()
+    h = out["h"]
+    assert signal.getsignal(signal.SIGTERM) == prev   # untouched
+    assert not h.should_stop
+    h.request_stop()
+    assert h.should_stop
+    h.uninstall()                                 # no-op, nothing installed
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-on-signal / resume, end to end
+# ---------------------------------------------------------------------------
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def test_signal_checkpoint_resume_is_bit_identical(tmp_path):
+    """A run preempted by a REAL SIGTERM checkpoints inside the grace
+    window; a fresh trainer restores that checkpoint and finishes the
+    schedule with parameters bit-identical to a never-preempted run."""
+    cfg = small_test_config()
+    steps = 6
+
+    def tcfg(d):
+        return TrainConfig(steps=steps, warmup_steps=1, ckpt_every=100,
+                           ckpt_dir=str(d), learning_rate=1e-3)
+
+    # reference: uninterrupted
+    ref = Trainer(cfg, tcfg(tmp_path / "ref"), batch=2, seq=8).run()
+    assert ref["last_step"] == steps and not ref["stopped_early"]
+
+    # preempted: the signal lands mid-run; the poll after the current
+    # step saves and exits early
+    h = PreemptionHandler()
+    try:
+        tr = Trainer(cfg, tcfg(tmp_path / "pre"), batch=2, seq=8,
+                     preemption=h)
+        signal.raise_signal(signal.SIGTERM)
+        out = tr.run()
+    finally:
+        h.uninstall()
+    assert out["stopped_early"]
+    assert 0 < out["last_step"] < steps
+    assert tr.ckpt.all_steps() == [out["last_step"]]
+
+    # resume from the signal checkpoint and finish the schedule
+    tr2 = Trainer(cfg, tcfg(tmp_path / "pre"), batch=2, seq=8)
+    _, _, start = tr2.init_or_restore()
+    assert start == out["last_step"]
+    out2 = tr2.run()
+    assert out2["last_step"] == steps and not out2["stopped_early"]
+
+    for a, b in zip(_leaves(ref["params"]), _leaves(out2["params"])):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_preemption_poll_saves_even_between_ckpt_every(tmp_path):
+    """ckpt_every is large; the preemption save must not wait for it."""
+    cfg = small_test_config()
+    tcfg = TrainConfig(steps=50, warmup_steps=1, ckpt_every=1000,
+                       ckpt_dir=str(tmp_path / "ck"), learning_rate=1e-3)
+    h = PreemptionHandler(install=False)
+    tr = Trainer(cfg, tcfg, batch=2, seq=8, preemption=h)
+    h.request_stop()
+    out = tr.run()
+    assert out["stopped_early"] and out["last_step"] == 1
+    assert tr.ckpt.all_steps() == [1]

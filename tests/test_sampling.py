@@ -8,7 +8,8 @@ import pytest
 
 from repro.config import small_test_config
 from repro.models import lm
-from repro.serve import ServeEngine, sample_token
+from repro.serve import (RequestTooLarge, ServeEngine,
+                         sample_token)
 
 
 def _logits(b=4, v=32, seed=0):
@@ -93,7 +94,8 @@ def test_slotwise_distinct_keys_decorrelate_rows():
 
 
 # ---------------------------------------------------------------------------
-# Decode-window overflow: loud ValueError, not a silent clamp
+# Decode-window overflow: loud typed error (RequestTooLarge, still a
+# ValueError for legacy callers), not a silent clamp
 # ---------------------------------------------------------------------------
 
 def test_generate_overflow_raises_value_error():
@@ -102,8 +104,9 @@ def test_generate_overflow_raises_value_error():
     eng = ServeEngine(cfg, params, max_len=12)
     prompt = jnp.zeros((1, 8), jnp.int32)
     for fn in (eng.generate, eng.generate_loop):
-        with pytest.raises(ValueError) as ei:
+        with pytest.raises(RequestTooLarge) as ei:
             fn(prompt, 5)                      # 8 + 5 > 12
+        assert isinstance(ei.value, ValueError)
         msg = str(ei.value)
         assert "max_len=12" in msg and "prompt_len=8" in msg \
             and "steps=5" in msg

@@ -14,8 +14,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.config import PUMConfig, small_test_config
 from repro.models import lm
-from repro.serve import (ContinuousBatchingScheduler, Request,
-                         oracle_completion, synthetic_workload)
+from repro.serve import (ContinuousBatchingScheduler, InvalidRequest,
+                         Request, RequestTooLarge, oracle_completion,
+                         synthetic_workload)
 
 FAMILIES = {
     "dense": dict(),
@@ -148,6 +149,9 @@ def test_scheduler_determinism_across_runs():
 
 def test_scheduler_rejects_oversized_request():
     sched = _sched(num_slots=2, max_len=16)
+    # typed (RequestTooLarge) but still a ValueError for legacy callers
+    with pytest.raises(RequestTooLarge, match="max_len"):
+        sched.run([Request(list(range(10)), max_tokens=10)])
     with pytest.raises(ValueError, match="max_len"):
         sched.run([Request(list(range(10)), max_tokens=10)])
 
@@ -173,7 +177,7 @@ def test_scheduler_rid_autoassignment_skips_explicit_rids():
     assert len(out) == 3 and 0 in out
     assert out[0].prompt == [4, 5]                        # explicit wins
     # true duplicates among explicit rids still rejected
-    with pytest.raises(ValueError, match="duplicate"):
+    with pytest.raises(InvalidRequest, match="duplicate"):
         sched.run([Request([1], max_tokens=2, rid=5),
                    Request([2], max_tokens=2, rid=5)])
 
@@ -185,7 +189,7 @@ def test_scheduler_validates_whole_trace_before_admitting():
     sched = _sched(num_slots=2, max_len=16)
     good = Request([1, 2, 3], max_tokens=4, seed=1)
     bad = Request(list(range(10)), max_tokens=10, arrival=2)
-    with pytest.raises(ValueError, match="max_len"):
+    with pytest.raises(RequestTooLarge, match="max_len"):
         sched.run([good, bad])
     assert not sched._active.any()          # nothing admitted
     out = sched.run([good])                 # next trace is unaffected
@@ -345,7 +349,7 @@ def test_paged_scheduler_rejects_request_exceeding_pool_capacity():
                    num_kv_blocks=3, chunked_prefill=True)
     good = Request([1, 2, 3], max_tokens=4, seed=1)
     bad = Request(list(range(8)), max_tokens=8, arrival=1)   # needs 4 > 3
-    with pytest.raises(ValueError, match="pool capacity"):
+    with pytest.raises(RequestTooLarge, match="pool capacity"):
         sched.run([good, bad])
     # whole-trace validation: nothing was admitted, next trace clean
     assert not sched._active.any() and not sched._prefills
@@ -398,3 +402,37 @@ def test_scheduler_eos_at_every_position():
         stop = rollout.index(int(eos))        # first occurrence wins
         assert out[0].tokens == rollout[:stop + 1]
         assert out[0].finish_reason == "eos"
+
+
+# ---------------------------------------------------------------------------
+# synthetic workload: Poisson arrival mode (shared by benches + chaos)
+# ---------------------------------------------------------------------------
+
+def test_synthetic_workload_poisson_mode():
+    """``poisson_rate`` stamps float wall-clock arrivals (monotone, with
+    an integer-step shadow) plus front-end metadata, deterministically
+    per seed — and the same trace still serves through ``run``."""
+    reqs = synthetic_workload(12, 50, max_prompt=6, max_new=5,
+                              poisson_rate=40.0, priority_choices=(0, 1, 2),
+                              deadline_ms=250.0, seed=11)
+    times = [r.arrival_time for r in reqs]
+    assert all(t is not None and t > 0.0 for t in times)
+    assert times == sorted(times)                  # arrivals never reorder
+    for r in reqs:
+        assert r.arrival == int(r.arrival_time)    # integer-step shadow
+        assert r.priority in (0, 1, 2)
+        assert r.deadline_ms == 250.0
+    # seeded: the whole trace (prompts, seeds, arrivals) replays exactly
+    again = synthetic_workload(12, 50, max_prompt=6, max_new=5,
+                               poisson_rate=40.0, priority_choices=(0, 1, 2),
+                               deadline_ms=250.0, seed=11)
+    assert reqs == again
+    assert synthetic_workload(12, 50, poisson_rate=40.0, seed=12) != reqs
+    # legacy mode keeps arrival_time unset (run()'s simulated clock only)
+    legacy = synthetic_workload(4, 50, mean_interarrival=1.0, seed=11)
+    assert all(r.arrival_time is None for r in legacy)
+    # the Poisson trace drives the step-clock scheduler unchanged
+    sched = _sched(num_slots=2)
+    reqs = synthetic_workload(4, sched.cfg.vocab_size, max_prompt=5,
+                              max_new=4, poisson_rate=3.0, seed=5)
+    _check_trace(sched, reqs)
