@@ -1,8 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist test-serve test-tp test-chaos lint quickstart bench \
-	bench-smoke bench-baseline bench-check audit
+.PHONY: test test-dist test-serve test-tp test-chaos test-prefix lint \
+	quickstart bench bench-smoke bench-baseline bench-check audit
 
 # tier-1 verify; test_distributed.py spawns its own subprocesses with
 # XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -47,6 +47,16 @@ test-serve:
 # overload must come back typed, never raised (tests/test_frontend.py)
 test-chaos:
 	$(PY) -m pytest -q tests/test_chaos.py tests/test_frontend.py
+
+# prefix-caching suite (ISSUE 8): allocator refcount/typed-error unit
+# tests + the PrefixCache lifecycle (tests/test_kv_pool.py), the
+# sharing-on == sharing-off == solo-oracle equivalence grid
+# (tests/test_scheduler.py), and the chaos-storm refcount leak checks
+# (tests/test_chaos.py)
+test-prefix:
+	$(PY) -m pytest -q tests/test_kv_pool.py
+	$(PY) -m pytest -q tests/test_scheduler.py tests/test_chaos.py \
+		-k "prefix"
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -46,8 +46,16 @@ def pct_change(base: float, fresh: float) -> float:
 
 def compare(baseline: dict[str, tuple[float, str]],
             fresh: dict[str, tuple[float, str]],
-            tolerance: float, ignore: list) -> tuple[list, bool]:
-    """Returns (markdown table rows, any_regression)."""
+            tolerance: float, ignore: list,
+            abs_tolerance: float = 1e-9) -> tuple[list, bool]:
+    """Returns (markdown table rows, any_regression).
+
+    Metrics whose baseline is zero (or within ``abs_tolerance`` of it —
+    e.g. a count that was legitimately 0 on the committed run) are gated
+    on the *absolute* difference against ``abs_tolerance`` instead of
+    ``pct_change``'s infinite-percent verdict, so a 0 → 1-count drift
+    reads as a finite, explainable delta rather than ``+inf%`` (and a
+    0 → 0 row never trips on float noise)."""
     rows = []
     bad = False
 
@@ -68,22 +76,37 @@ def compare(baseline: dict[str, tuple[float, str]],
             bad = True
             continue
         fresh_v, _ = fresh[name]
-        delta = pct_change(base_v, fresh_v)
-        worse = delta > 0 if unit in LOWER_IS_BETTER_UNITS else delta < 0
-        regressed = worse and abs(delta) > tolerance
+        if abs(base_v) <= abs_tolerance:
+            # zero/near-zero baseline: a percent delta is undefined
+            # (inf) — gate on the absolute difference instead
+            diff = fresh_v - base_v
+            worse = diff > 0 if unit in LOWER_IS_BETTER_UNITS \
+                else diff < 0
+            regressed = worse and abs(diff) > abs_tolerance
+            delta_txt = f"{diff:+.4g} abs"
+            over = abs(diff) > abs_tolerance
+            tol_txt = f"> {abs_tolerance:g} abs"
+        else:
+            delta = pct_change(base_v, fresh_v)
+            worse = delta > 0 if unit in LOWER_IS_BETTER_UNITS \
+                else delta < 0
+            regressed = worse and abs(delta) > tolerance
+            delta_txt = f"{delta:+.1f}%"
+            over = abs(delta) > tolerance
+            tol_txt = f"> {tolerance:g}%"
         if ignored(name):
             status = "⏭ ignored"
         elif regressed:
-            status = f"❌ regressed (> {tolerance:g}%)"
+            status = f"❌ regressed ({tol_txt})"
             bad = True
         elif worse:
             status = "⚠️ worse (within tolerance)"
-        elif abs(delta) > tolerance:
+        elif over:
             status = "✅ improved"
         else:
             status = "✓ ok"
         rows.append((name, f"{base_v:.4g} {unit}", f"{fresh_v:.4g}",
-                     f"{delta:+.1f}%", status))
+                     delta_txt, status))
     return rows, bad
 
 
@@ -136,11 +159,16 @@ def main() -> int:
     ap.add_argument("--ignore", action="append", default=[],
                     help="glob of metric names to exclude from gating "
                          "(repeatable)")
+    ap.add_argument("--abs-tolerance", type=float, default=1e-9,
+                    help="absolute-difference gate for metrics whose "
+                         "baseline is zero/near-zero (percent deltas "
+                         "are undefined there)")
     args = ap.parse_args()
 
     baseline = load(args.baseline)
     fresh = load(args.fresh)
-    rows, bad = compare(baseline, fresh, args.tolerance, args.ignore)
+    rows, bad = compare(baseline, fresh, args.tolerance, args.ignore,
+                        abs_tolerance=args.abs_tolerance)
     print(render_markdown(rows, args.tolerance))
     missing = missing_metrics(baseline, fresh, args.ignore)
     if missing:

@@ -414,6 +414,64 @@ def bench_serve_load(small: bool = False) -> list[Row]:
     return rows
 
 
+def bench_serve_prefix(small: bool = False) -> list[Row]:
+    """Prefix caching over shared-prefix traffic, sharing on vs off.
+
+    Both schedulers serve the same seeded trace twice (the first pass
+    warms compile caches AND the prefix index, so the timed pass shows
+    steady-state behaviour).  The wall-clock throughput rows are
+    IGNOREd by bench-check (wallclock); the regression surface is the
+    deterministic counters:
+
+      * ``prefill_tokens_skipped`` — prompt tokens whose prefill never
+        ran because their blocks were attached from the cache;
+      * ``capacity_multiplier`` — total naive block demand of the trace
+        over its prefix-aware private demand against the warm cache:
+        how many times more shared-prefix requests the same pool funds.
+    """
+    from repro.config import small_test_config
+    from repro.models import lm
+    from repro.serve import ContinuousBatchingScheduler, synthetic_workload
+
+    cfg = small_test_config()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    slots = 2 if small else 4
+    gen = 6 if small else 12
+    n = 8 if small else 24
+    block = 4
+    spl = 8 if small else 16
+    max_prompt = spl + (4 if small else 8)
+    trace = synthetic_workload(n, cfg.vocab_size, max_prompt=max_prompt,
+                               max_new=gen, eos_rate=0.0,
+                               mean_interarrival=0.5,
+                               shared_prefix_len=spl, seed=9)
+    rows: list[Row] = []
+    scheds = {}
+    for name, on in (("off", False), ("on", True)):
+        sched = ContinuousBatchingScheduler(
+            cfg, params, num_slots=slots, max_len=max_prompt + gen + 1,
+            kv_block_size=block, chunked_prefill=True, prefix_cache=on)
+        scheds[name] = sched
+        sched.run(trace)                 # warm: compiles + fills the index
+        t0 = time.perf_counter()
+        out = sched.run(trace)
+        dt = time.perf_counter() - t0
+        toks = sum(len(c.tokens) for c in out.values())
+        rows.append((f"serve_prefix/{name}_toks_per_s", toks / dt,
+                     "tok/s"))
+    stats = scheds["on"].prefix_stats()
+    naive = sum(scheds["off"].blocks_needed(r) for r in trace)
+    private = sum(scheds["on"].blocks_needed(r) for r in trace)
+    rows += [("serve_prefix/prefill_tokens_skipped",
+              stats["tokens_skipped"], "tokens"),
+             ("serve_prefix/hits", stats["hits"], "requests"),
+             ("serve_prefix/capacity_multiplier", naive / private, "x")]
+    assert scheds["on"]._alloc.live_blocks \
+        == scheds["on"].prefix_cached_blocks       # leak-free after drain
+    assert scheds["off"]._alloc.live_blocks == 0
+    return rows
+
+
 ALL_MICRO = {
     "aes_bulk": bench_aes_bulk,
     "bitslice_mvm": bench_bitslice_mvm,
@@ -423,4 +481,5 @@ ALL_MICRO = {
     "serve_decode": bench_serve_decode,
     "serve_batch": bench_serve_batch,
     "serve_load": bench_serve_load,
+    "serve_prefix": bench_serve_prefix,
 }

@@ -149,6 +149,11 @@ def build_cell(family: str, mode: str, layout: str, tp: int, *,
             step_args.append(
                 jnp.zeros((b, sched.table_width), jnp.int32))
             names.append("block_table")
+            # always in the signature (all-zero when prefix caching is
+            # off) so ONE compiled shape serves both and the
+            # shared-read-only rule audits every paged decode graph
+            step_args.append(jnp.zeros((b,), jnp.int32))
+            names.append("shared_cols")
         with eng.mesh_ctx():
             tr = _trace(sched._step, step_args)
             lowered = tr.lower().as_text() if lower else None
@@ -173,9 +178,10 @@ def build_cell(family: str, mode: str, layout: str, tp: int, *,
                    jnp.zeros((1, BLOCK_SIZE), jnp.int32),
                    jnp.int32(0),
                    jnp.zeros((1, sched.table_width), jnp.int32),
-                   jnp.int32(0))
+                   jnp.int32(0),
+                   jnp.zeros((1,), jnp.int32))   # shared_cols
         cp_names = ("params", "states", "tokens", "start", "table_row",
-                    "slot")
+                    "slot", "shared_cols")
         with eng.mesh_ctx():
             tr = _trace(sched._chunk_prefill, cp_args)
             lowered = tr.lower().as_text() if lower else None

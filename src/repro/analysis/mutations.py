@@ -108,6 +108,13 @@ def all_mutations() -> list[Mutation]:
             lambda: [(scheduler, "_mask_block_table",
                       lambda table, active: table)]),
         Mutation(
+            "drop-shared-mask",
+            "the write-table split stops trash-routing prefix-cache-"
+            "shared block-table columns",
+            "shared-read-only", decode_cell,
+            lambda: [(scheduler, "_mask_shared_cols",
+                      lambda table, shared: table)]),
+        Mutation(
             "drop-freeze",
             "inactive rows' recurrent state updates unconditionally",
             "masked-scatter",

@@ -8,10 +8,12 @@ from repro.analysis.rules.compilation import SingleCompilation
 from repro.analysis.rules.donation import Donation
 from repro.analysis.rules.pum_path import PumPath
 from repro.analysis.rules.scatter import MaskedScatter
+from repro.analysis.rules.shared import SharedReadOnly
 
 ALL_RULES = [
     BarrierCoverage(),
     MaskedScatter(),
+    SharedReadOnly(),
     IntegerAccumulators(),
     Donation(),
     SingleCompilation(),
@@ -19,5 +21,5 @@ ALL_RULES = [
 ]
 
 __all__ = ["ALL_RULES", "BarrierCoverage", "MaskedScatter",
-           "IntegerAccumulators", "Donation", "SingleCompilation",
-           "PumPath"]
+           "SharedReadOnly", "IntegerAccumulators", "Donation",
+           "SingleCompilation", "PumPath"]

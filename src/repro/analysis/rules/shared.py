@@ -1,0 +1,65 @@
+"""shared-read-only: prefix-cache-shared KV blocks are never written.
+
+Pins ISSUE 8's bug class: with block-granular prefix caching, a slot's
+leading ``shared_cols`` block-table columns point at pool blocks other
+requests (and the cache itself) hold references to.  Gathers must read
+through the real table, but every *write* must be addressed through the
+``_mask_shared_cols`` split — which trash-routes the shared columns —
+or one request's decode scribbles over a prefix another request is
+attending.
+
+The proof obligation is structural, on the traced jaxpr, in every paged
+graph that writes the pool (slot-wise decode AND the streaming
+chunk-prefill step, whose uncached-tail chunks attend shared blocks):
+
+  * the step carries a ``shared_cols`` invar (always in the signature —
+    all-zero when caching is off, so ONE compiled shape serves both and
+    this rule audits every paged cell, not just a caching variant);
+  * a ``mask_shared`` scope is present (the write-table split actually
+    ran at trace time);
+  * the *scatter indices* of every KV-pool write statically depend on
+    ``shared_cols`` — the write path goes through the masked table, so
+    knocking out the mask severs the dependence and the rule fires.
+"""
+from __future__ import annotations
+
+from repro.analysis.report import Violation
+from repro.analysis.rules.scatter import _WRITE_PRIMS, _index_deps
+
+
+class SharedReadOnly:
+    name = "shared-read-only"
+
+    def check(self, g, idx) -> list[Violation]:
+        if g.kind not in ("decode", "chunk_prefill"):
+            return []
+        if g.layout != "paged" or not g.meta.get("has_kv"):
+            return []
+        v: list[Violation] = []
+
+        def fail(msg):
+            v.append(Violation(self.name, g.name, msg))
+
+        shared = idx.invars_matching(r"^shared_cols")
+        if not shared:
+            fail("paged step traces without a shared_cols invar — the "
+                 "read/write table split is gone from the signature")
+            return v
+        if not idx.in_scope("mask_shared"):
+            fail("no mask_shared scope in the traced step — the write "
+                 "table is not being derived from the shared-column "
+                 "mask")
+        pool = idx.invars_matching(r"\['[kv]_pool'\]")
+        writes = [r for r in idx.records
+                  if r.prim in _WRITE_PRIMS and r.in_deps
+                  and (r.in_deps[0] & pool)]
+        if not writes:
+            fail("no KV-pool writes found — either the pool write moved "
+                 "out of the traced step or provenance tracking broke")
+        for r in writes:
+            where = "/".join(r.stack) or "<top>"
+            if not (_index_deps(r) & shared):
+                fail(f"pool write at {where}: scatter indices do not "
+                     f"depend on shared_cols — writes into prefix-"
+                     f"cache-shared blocks are not trash-routed")
+        return v

@@ -23,6 +23,7 @@ detected from per-step timing reports:
 from __future__ import annotations
 
 import collections
+import math
 import os
 import threading
 import time
@@ -91,11 +92,18 @@ class Summary:
 
     def percentile(self, q: float) -> float:
         """Nearest-rank percentile of the current window, ``q`` in
-        [0, 1]."""
+        [0, 1]: the smallest value with at least ``ceil(q * n)`` of the
+        ``n`` observations at or below it (rank ``max(ceil(q*n), 1)``,
+        1-based).  Exact at the edges: q=0 is the window minimum, q=1
+        the maximum, and a window of one observation reports that
+        observation at every ``q`` (the old ``int(q*n)`` truncation
+        over-indexed mid-range ranks — e.g. p50 of four observations
+        returned the 3rd, not the 2nd)."""
         if not self._window:
             return 0.0
         s = sorted(self._window)
-        return s[min(int(q * len(s)), len(s) - 1)]
+        rank = max(math.ceil(q * len(s)), 1)
+        return s[min(rank, len(s)) - 1]
 
     @property
     def count(self) -> int:

@@ -21,6 +21,12 @@ a 1-D ``model`` mesh; bit-identical to the single-device engine):
 python -m repro.launch.serve --arch glm4-9b --batch-slots 4 --tp 4
 --pum-mode int8 --kv-block-size 16 --chunked-prefill``
 
+Prefix caching (ISSUE 8: content-hashed full prompt-prefix blocks
+shared read-only between requests, copy-on-write at the boundary):
+``python -m repro.launch.serve --arch glm4-9b --batch-slots 4
+--kv-block-size 16 --chunked-prefill --prefix-cache
+--shared-prefix-len 32``
+
 Resilient front-end (PR 7: bounded admission queue, deadlines,
 backpressure, typed reject/expire outcomes; optional chaos injection):
 ``python -m repro.launch.serve --arch glm4-9b --batch-slots 4
@@ -81,6 +87,15 @@ def main():
                     help="stream prompts through the decode loop in "
                          "block-size chunks interleaved with running "
                          "decodes (requires --kv-block-size)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share full prompt-prefix blocks between "
+                         "requests (content-hashed, refcounted, "
+                         "copy-on-write at the boundary); requires "
+                         "--kv-block-size")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="give every synthetic request this many common "
+                         "leading prompt tokens (exercises the prefix "
+                         "cache; 0 = fully random prompts)")
     ap.add_argument("--frontend", action="store_true",
                     help="serve the trace through the resilient "
                          "ServeFrontend (admission control, deadlines, "
@@ -146,14 +161,16 @@ def serve_continuous(cfg, params, args, mesh=None) -> None:
         cfg, params, num_slots=args.batch_slots, max_len=max_len,
         prepack=not args.no_prepack, kv_block_size=args.kv_block_size,
         num_kv_blocks=args.num_kv_blocks,
-        chunked_prefill=args.chunked_prefill, mesh=mesh)
+        chunked_prefill=args.chunked_prefill,
+        prefix_cache=args.prefix_cache, mesh=mesh)
     if args.frontend:
         serve_frontend(cfg, sched, args, n)
         return
     reqs = synthetic_workload(
         n, cfg.vocab_size, max_prompt=args.prompt_len, max_new=args.gen,
         mean_interarrival=0.0 if args.workload == "burst" else 2.0,
-        temperature_choices=(args.temperature,), seed=args.seed)
+        temperature_choices=(args.temperature,),
+        shared_prefix_len=args.shared_prefix_len, seed=args.seed)
     t0 = time.perf_counter()
     out = sched.run(reqs)
     dt = time.perf_counter() - t0
@@ -163,7 +180,8 @@ def serve_continuous(cfg, params, args, mesh=None) -> None:
            ((r, out[r.rid]) for r in reqs)]
     kv = (f"paged(block={args.kv_block_size}, "
           f"blocks={sched.num_kv_blocks}"
-          f"{', chunked' if args.chunked_prefill else ''})"
+          f"{', chunked' if args.chunked_prefill else ''}"
+          f"{', prefix-cache' if args.prefix_cache else ''})"
           if args.kv_block_size > 0 else "contiguous")
     print(f"arch={args.arch} mode={args.pum_mode} slots={args.batch_slots} "
           f"tp={args.tp} "
@@ -173,6 +191,8 @@ def serve_continuous(cfg, params, args, mesh=None) -> None:
           f"compile)")
     print(f"finish: {eos_n} eos / {len(out) - eos_n} length; latency "
           f"steps p50={sorted(lat)[len(lat) // 2]} max={max(lat)}")
+    if args.prefix_cache:
+        print("prefix-cache:", json.dumps(sched.prefix_stats()))
     first = out[reqs[0].rid]
     print("sample:", (first.prompt + first.tokens)[:32])
 
@@ -190,7 +210,8 @@ def serve_frontend(cfg, sched, args, n) -> None:
     reqs = synthetic_workload(
         n, cfg.vocab_size, max_prompt=args.prompt_len, max_new=args.gen,
         poisson_rate=0.0 if args.workload == "burst" else 25.0,
-        temperature_choices=(args.temperature,), seed=args.seed)
+        temperature_choices=(args.temperature,),
+        shared_prefix_len=args.shared_prefix_len, seed=args.seed)
     t0 = time.perf_counter()
     res = fe.results(fe.serve_trace(reqs))
     dt = time.perf_counter() - t0
@@ -209,6 +230,8 @@ def serve_frontend(cfg, sched, args, n) -> None:
             "serve.tok_per_s", "serve.shed", "serve.rejected",
             "serve.expired", "serve.faults", "serve.retries")
     print("metrics:", json.dumps({k: round(snap[k], 2) for k in keys}))
+    if args.prefix_cache:
+        print("prefix-cache:", json.dumps(sched.prefix_stats()))
 
 
 if __name__ == "__main__":

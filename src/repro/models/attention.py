@@ -170,6 +170,7 @@ def _chunked_attention(q, k, v, q_offset, softcap):
 def _paged_update_and_gather(cache: Params, k: jax.Array, v: jax.Array,
                              block_table: jax.Array, cache_index: jax.Array,
                              kv_len: int | None,
+                             write_table: jax.Array | None = None,
                              ) -> tuple[Params, jax.Array, jax.Array,
                                         jax.Array]:
     """Scatter this step's K/V through the block table into the shared
@@ -181,6 +182,13 @@ def _paged_update_and_gather(cache: Params, k: jax.Array, v: jax.Array,
     garbage is never attended).  Returns the updated cache, the gathered
     [B, T, KV, hd] views, and the [B, S] absolute query positions.
 
+    ``write_table`` (default: the block table itself) addresses the
+    *scatter* only: prefix caching passes a copy whose shared read-only
+    columns are re-routed to the trash block
+    (``kv_pool._mask_shared_cols``), so a slot can attend another
+    request's cached prefix blocks without ever being able to write
+    into them — the gather always uses the real ``block_table``.
+
     ``kv_len`` crops the gathered view from ``W * block_size`` back to
     the engine's window so the attention reduction shapes — hence the
     compiled reduction order, hence bitwise numerics — match the
@@ -189,9 +197,11 @@ def _paged_update_and_gather(cache: Params, k: jax.Array, v: jax.Array,
     b, s = k.shape[:2]
     bs = cache["k_pool"].shape[1]
     w = block_table.shape[1]
+    if write_table is None:
+        write_table = block_table
     pos = cache_index[:, None] + jnp.arange(s)[None, :]            # [B, S]
     slot_col = jnp.clip(pos // bs, 0, w - 1)
-    phys = jnp.take_along_axis(block_table, slot_col, axis=1)      # [B, S]
+    phys = jnp.take_along_axis(write_table, slot_col, axis=1)      # [B, S]
     off = pos % bs
     with jax.named_scope("kv_pool_write"):
         k_pool = cache["k_pool"].at[phys, off].set(
@@ -223,6 +233,7 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
               use_rope: bool = True,
               block_table: jax.Array | None = None,
               kv_len: int | None = None,
+              write_table: jax.Array | None = None,
               ) -> tuple[jax.Array, Params | None]:
     """x: [B, S, D].  Modes:
       * train/prefill (cache None, cross_kv None): causal self-attention;
@@ -272,7 +283,8 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
             f"paged prefill chunk of {s} tokens exceeds {2 * CHUNK_Q}; " \
             f"enable chunked_prefill to stream long prompts"
         cache, k_all, v_all, qpos = _paged_update_and_gather(
-            cache, k, v, block_table, cache_index, kv_len)
+            cache, k, v, block_table, cache_index, kv_len,
+            write_table=write_table)
         kpos = jnp.arange(k_all.shape[1])
         mask = kpos[None, None, :] <= qpos[..., None]              # [B,S,T]
         out = _plain_attention(q, k_all, v_all, mask,

@@ -195,6 +195,7 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
             last_only: bool = False,
             block_table: jax.Array | None = None,
             kv_len: int | None = None,
+            write_table: jax.Array | None = None,
             ) -> tuple[jax.Array, list[Any] | None,
                        dict[str, jax.Array]]:
     """tokens: [B, S] int32 -> (logits, states', aux).
@@ -258,7 +259,7 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
                     blk_params[j], x, cfg, j, positions=positions,
                     state=st, cache_index=cache_index,
                     encoder_out=encoder_out, block_table=block_table,
-                    kv_len=kv_len)
+                    kv_len=kv_len, write_table=write_table)
             new_states.append(st_new if st_new is not None else {})
             for k, v in aux.items():
                 aux_acc[k] = aux_acc.get(k, 0.0) + v

@@ -121,10 +121,13 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, layer_idx: int, *,
                 encoder_out: jax.Array | None = None,
                 block_table: jax.Array | None = None,
                 kv_len: int | None = None,
+                write_table: jax.Array | None = None,
                 ) -> tuple[jax.Array, Params | None,
                            dict[str, jax.Array]]:
     """Returns (x, new_state, aux_losses).  ``block_table``/``kv_len``
-    select the paged KV path in self-attention (serve.kv_pool)."""
+    select the paged KV path in self-attention (serve.kv_pool);
+    ``write_table`` re-routes its scatters (prefix-cache shared blocks
+    are read-only)."""
     mk = mixer_kind(cfg, layer_idx)
     fk = ffn_kind(cfg, layer_idx)
     aux: dict[str, jax.Array] = {}
@@ -135,7 +138,8 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, layer_idx: int, *,
             p["attn"], h, cfg, positions=positions, cache=state,
             cache_index=cache_index,
             use_rope=not cfg.is_encoder_decoder,
-            block_table=block_table, kv_len=kv_len)
+            block_table=block_table, kv_len=kv_len,
+            write_table=write_table)
     elif mk == "mamba":
         h, state = ssm.mamba(p["mamba"], h, cfg, state=state)
     elif mk == "mlstm":

@@ -1,15 +1,17 @@
 from repro.serve.chaos import ChaosInjector, ChaosPolicy
 from repro.serve.engine import ServeEngine, make_decode_step, sample_token
-from repro.serve.errors import (AdmissionRejected, DeadlineExceeded,
-                                FaultInjected, FrontendError, InvalidRequest,
-                                LoadShed, PoolExhausted, QueueFull,
-                                RequestCancelled, RequestTooLarge,
-                                RetriesExhausted, SchedulerError,
-                                SchedulerStalled)
+from repro.serve.errors import (AdmissionRejected, BlockAllocatorError,
+                                BlockNotLive, BlockOutOfRange,
+                                DeadlineExceeded, FaultInjected,
+                                FrontendError, InvalidRequest, LoadShed,
+                                PoolExhausted, QueueFull, RequestCancelled,
+                                RequestTooLarge, RetriesExhausted,
+                                SchedulerError, SchedulerStalled)
 from repro.serve.frontend import (FrontendConfig, RequestHandle, ServeFrontend,
                                   ServeResult)
-from repro.serve.kv_pool import (BlockAllocator, blocks_needed,
-                                 kv_cache_bytes, table_width)
+from repro.serve.kv_pool import (BlockAllocator, PrefixCache, blocks_needed,
+                                 kv_cache_bytes, prefix_chain_hashes,
+                                 table_width)
 from repro.serve.policies import (QueueEntry, RequestQueue, RetryPolicy,
                                   VirtualClock)
 from repro.serve.scheduler import (Completion, ContinuousBatchingScheduler,

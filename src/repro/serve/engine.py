@@ -53,12 +53,13 @@ def make_decode_step(cfg: ModelConfig, scan_layers: bool = True,
 
     def decode_step(params, states, token, cache_index, *,
                     encoder_out: jax.Array | None = None,
-                    block_table: jax.Array | None = None):
+                    block_table: jax.Array | None = None,
+                    write_table: jax.Array | None = None):
         logits, states, _ = lm.forward(
             params, token, cfg, states=states, cache_index=cache_index,
             encoder_out=encoder_out, last_only=True,
             scan_layers=scan_layers, block_table=block_table,
-            kv_len=kv_len)
+            kv_len=kv_len, write_table=write_table)
         return logits, states
 
     return decode_step

@@ -39,6 +39,24 @@ class RequestTooLarge(InvalidRequest):
     whole pool.  Re-create the engine bigger, or reject up front."""
 
 
+class BlockAllocatorError(SchedulerError, ValueError):
+    """Base for block-allocator misuse.  Both subtypes are *caller
+    bugs* (the scheduler's bookkeeping lost track of ownership), never
+    load-dependent — they must fail loudly instead of silently
+    corrupting refcounts."""
+
+
+class BlockNotLive(BlockAllocatorError):
+    """``release``/``acquire`` named a block with no live refcount —
+    a double-free, or an id this allocator never handed out."""
+
+
+class BlockOutOfRange(BlockAllocatorError):
+    """A block id outside ``first_id .. first_id + num_blocks - 1`` —
+    including the reserved trash block 0, which is never allocated and
+    must never be freed."""
+
+
 class PoolExhausted(SchedulerError, RuntimeError):
     """A slot or KV-block allocation cannot be funded *right now*.
 

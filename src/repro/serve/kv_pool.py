@@ -34,7 +34,10 @@ zeros either way.
 """
 from __future__ import annotations
 
-from collections import deque
+import dataclasses
+import hashlib
+from collections import OrderedDict, deque
+from collections.abc import Sequence
 from typing import Any
 
 import jax
@@ -42,6 +45,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import transformer
+from repro.serve.errors import BlockNotLive, BlockOutOfRange
 
 TRASH_BLOCK = 0
 
@@ -64,14 +68,25 @@ def table_width(max_len: int, block_size: int) -> int:
 
 
 class BlockAllocator:
-    """Host-side free-list allocator over block ids ``first_id ..
-    first_id + num_blocks - 1`` (id 0 stays reserved for the trash
-    block under the default ``first_id=1``).
+    """Host-side refcounted free-list allocator over block ids
+    ``first_id .. first_id + num_blocks - 1`` (id 0 stays reserved for
+    the trash block under the default ``first_id=1``).
 
     FIFO reuse keeps allocation order deterministic for a given
     admit/retire trace.  ``alloc`` is all-or-nothing: a request that
     does not fit leaves the free list untouched (the scheduler keeps it
     queued rather than admitting it half-funded).
+
+    Prefix caching shares blocks between requests, so ownership is a
+    *refcount*: ``alloc`` hands out blocks at refcount 1, ``acquire``
+    takes an extra reference on an already-live block (a cache hit
+    attaching a shared prefix, or the prefix index pinning a block it
+    just registered), and ``release`` drops one — a block returns to
+    the free list only when its last reference goes.  Misuse raises
+    typed errors (:class:`~repro.serve.errors.BlockOutOfRange` for ids
+    the pool never owned — the trash block included —
+    :class:`~repro.serve.errors.BlockNotLive` for double-frees), both
+    ``ValueError``-compatible.
     """
 
     def __init__(self, num_blocks: int, first_id: int = TRASH_BLOCK + 1):
@@ -80,7 +95,7 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self.first_id = first_id
         self._free = deque(range(first_id, first_id + num_blocks))
-        self._live: set = set()
+        self._ref: dict[int, int] = {}     # live block id -> refcount >= 1
 
     @property
     def free_blocks(self) -> int:
@@ -88,30 +103,301 @@ class BlockAllocator:
 
     @property
     def live_blocks(self) -> int:
-        return len(self._live)
+        return len(self._ref)
+
+    def refcount(self, block: int) -> int:
+        """Live references on ``block`` (0 = free)."""
+        self._check_range(block)
+        return self._ref.get(block, 0)
+
+    def _check_range(self, block: int) -> None:
+        if not (self.first_id <= block < self.first_id + self.num_blocks):
+            raise BlockOutOfRange(
+                f"block {block} is not a pool block id (valid range "
+                f"{self.first_id}..{self.first_id + self.num_blocks - 1}; "
+                f"id {TRASH_BLOCK} is the reserved trash block)")
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
     def alloc(self, n: int) -> list[int] | None:
-        """Claim ``n`` blocks, or return None (not partial) if the pool
-        cannot fund the request right now."""
+        """Claim ``n`` blocks at refcount 1, or return None (not
+        partial) if the pool cannot fund the request right now."""
         if n < 0:
             raise ValueError(f"cannot alloc {n} blocks")
         if n > len(self._free):
             return None
         ids = [self._free.popleft() for _ in range(n)]
-        self._live.update(ids)
+        for i in ids:
+            self._ref[i] = 1
         return ids
 
-    def free(self, ids: list[int]) -> None:
+    def acquire(self, ids: Sequence[int]) -> None:
+        """Take one extra reference on each (already live) block."""
         for i in ids:
-            if i not in self._live:
-                raise ValueError(
-                    f"freeing block {i} that is not live (double-free or "
-                    f"foreign id)")
-            self._live.remove(i)
-            self._free.append(i)
+            self._check_range(i)
+            if i not in self._ref:
+                raise BlockNotLive(
+                    f"acquiring block {i} that is not live")
+        for i in ids:
+            self._ref[i] += 1
+
+    def release(self, ids: Sequence[int]) -> None:
+        """Drop one reference per block; the last reference returns the
+        block to the free list (FIFO, deterministic reuse order)."""
+        for i in ids:
+            self._check_range(i)
+            if i not in self._ref:
+                raise BlockNotLive(
+                    f"releasing block {i} that is not live (double-free "
+                    f"or foreign id)")
+            self._ref[i] -= 1
+            if self._ref[i] == 0:
+                del self._ref[i]
+                self._free.append(i)
+
+    def free(self, ids: Sequence[int]) -> None:
+        """Alias of :meth:`release` kept for pre-refcount call sites."""
+        self.release(ids)
+
+
+# ---------------------------------------------------------------------------
+# Block-granular prefix caching
+# ---------------------------------------------------------------------------
+
+def prefix_chain_hashes(tokens: Sequence[int], block_size: int,
+                        root: str = "") -> list[str]:
+    """Chain content hashes of every FULL ``block_size``-token prefix
+    chunk of ``tokens``: ``h_i = H(h_{i-1}, tokens[i*bs:(i+1)*bs])``
+    rooted at ``H(root)``.
+
+    Chaining makes ``h_i`` identify the whole prefix ``tokens[:(i+1) *
+    bs]``, not just chunk ``i`` — two prompts share cache entry ``i``
+    iff their first ``(i+1)*bs`` tokens are identical.  ``root`` folds
+    in model/config identity so entries can never match across engines
+    with different numerics."""
+    h = hashlib.sha256(root.encode()).hexdigest()
+    out = []
+    for i in range(len(tokens) // block_size):
+        chunk = tokens[i * block_size:(i + 1) * block_size]
+        h = hashlib.sha256(
+            (h + ":" + ",".join(str(int(t)) for t in chunk)).encode()
+        ).hexdigest()
+        out.append(h)
+    return out
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    """One cached full prompt-prefix block.
+
+    ``block`` is the physical pool block holding its K/V (None for
+    pure-recurrent stacks, which cache only the resume snapshot);
+    ``snapshot`` is the per-slot recurrent-state rows *after* consuming
+    the prefix this entry identifies (None when the family has no
+    recurrent state, or when the registering prefill's chunk boundaries
+    never landed on this block edge)."""
+    block: int | None
+    snapshot: Any = None
+
+
+class PrefixCache:
+    """Bounded content-addressed index of full prompt-prefix blocks.
+
+    Entries are keyed by :func:`prefix_chain_hashes` digests and kept in
+    LRU order (an ``OrderedDict`` touched on every hit).  The cache owns
+    one allocator reference per block-bearing entry, so a cached block
+    stays live after its registering request retires; eviction —
+    LRU-first, only entries whose block has no *other* reference —
+    releases that reference and the block returns to the free list.
+    Capacity is counted in entries, so pure-recurrent snapshot entries
+    are bounded too.
+    """
+
+    def __init__(self, alloc: BlockAllocator, block_size: int,
+                 capacity: int, root: str = ""):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.alloc = alloc
+        self.block_size = block_size
+        self.capacity = capacity
+        self.root = root
+        self._entries: OrderedDict[str, _PrefixEntry] = OrderedDict()
+        self.hits = 0               # admissions that attached >= 1 block
+        self.tokens_skipped = 0     # prompt tokens whose prefill was skipped
+        self.blocks_shared = 0      # shared block attachments (lifetime)
+
+    def hashes(self, tokens: Sequence[int]) -> list[str]:
+        return prefix_chain_hashes(tokens, self.block_size, self.root)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, h: str) -> bool:
+        return h in self._entries
+
+    @property
+    def cached_blocks(self) -> int:
+        """Pool blocks currently pinned by the cache (one ref each)."""
+        return sum(1 for e in self._entries.values()
+                   if e.block is not None)
+
+    @property
+    def evictable_blocks(self) -> int:
+        """Cached blocks only the cache still references — the pool
+        capacity admission could reclaim on demand."""
+        return self.evictable_margin()
+
+    def evictable_margin(self, exclude: Sequence[str] = ()) -> int:
+        """Evictable blocks outside ``exclude`` — admission passes the
+        hashes it is about to attach, so the funding estimate never
+        counts a block as both attachable and reclaimable."""
+        ex = set(exclude)
+        return sum(1 for h, e in self._entries.items()
+                   if h not in ex and e.block is not None
+                   and self.alloc.refcount(e.block) == 1)
+
+    def _usable(self, h: str, need_snapshot: bool) -> bool:
+        e = self._entries.get(h)
+        if e is None:
+            return False
+        return not (need_snapshot and e.snapshot is None)
+
+    def match(self, hashes: Sequence[str], *, need_snapshot: bool = False,
+              limit: int | None = None) -> int:
+        """Longest usable cached prefix, in blocks.  Pure peek: no
+        refcounts move, no LRU touch.  ``limit`` caps the match length
+        (recurrent stacks cannot resume past ``(prompt_len - 1) //
+        block_size`` — at least one tail token must run for first-token
+        logits, and KV-free rows have no copy-on-write escape).  With
+        ``need_snapshot`` the match ends at the deepest entry carrying a
+        recurrent-state snapshot (the resume point must restore one)."""
+        n = 0
+        for h in hashes:
+            if h not in self._entries:
+                break
+            n += 1
+        if limit is not None:
+            n = min(n, limit)
+        if need_snapshot:
+            while n > 0 and self._entries[hashes[n - 1]].snapshot is None:
+                n -= 1
+        return n
+
+    def attach(self, hashes: Sequence[str]) -> list[int]:
+        """Take a reference on every block of the matched prefix
+        ``hashes`` (all must be cached) and return the block ids in
+        prefix order.  LRU-touches the entries."""
+        blocks = []
+        for h in hashes:
+            e = self._entries[h]
+            self._entries.move_to_end(h)
+            if e.block is not None:
+                blocks.append(e.block)
+        self.alloc.acquire(blocks)
+        return blocks
+
+    def snapshot_at(self, h: str) -> Any:
+        return self._entries[h].snapshot
+
+    def register(self, hashes: Sequence[str],
+                 blocks: Sequence[int | None],
+                 snapshots: dict[int, Any] | None = None) -> int:
+        """Insert the prefix blocks of a completed prefill.
+
+        ``blocks[i]`` is the physical block holding chunk ``i`` (None
+        for pure-recurrent stacks); ``snapshots`` maps chunk index ->
+        recurrent rows after consuming ``(i+1)*block_size`` tokens.
+        Already-cached hashes are deduped (the existing entry wins —
+        the registering request's identical private copy simply retires
+        with the request).  Each newly inserted block takes one cache
+        reference.  Returns entries inserted."""
+        snapshots = snapshots or {}
+        inserted = 0
+        for i, h in enumerate(hashes):
+            if h in self._entries:
+                self._entries.move_to_end(h)
+                continue
+            if len(self._entries) >= self.capacity \
+                    and self._evict_lru(1) == 0:
+                break              # full of in-use entries; stop inserting
+            blk = blocks[i]
+            if blk is not None:
+                self.alloc.acquire([blk])
+            self._entries[h] = _PrefixEntry(blk, snapshots.get(i))
+            inserted += 1
+        return inserted
+
+    def _evict_lru(self, n_entries: int) -> int:
+        """Drop up to ``n_entries`` LRU entries whose block is not in
+        use elsewhere; returns entries evicted."""
+        victims = []
+        for h, e in self._entries.items():
+            if e.block is None or self.alloc.refcount(e.block) == 1:
+                victims.append(h)
+                if len(victims) == n_entries:
+                    break
+        for h in victims:
+            e = self._entries.pop(h)
+            if e.block is not None:
+                self.alloc.release([e.block])
+        return len(victims)
+
+    def evict_blocks(self, n_blocks: int,
+                     exclude: Sequence[str] = ()) -> int:
+        """Release at least ``n_blocks`` cached blocks back to the free
+        list if possible (LRU-first, in-use blocks skipped); returns
+        blocks actually freed.  Admission calls this when the free list
+        alone cannot fund a request the evictable margin could —
+        ``exclude`` protects the entries it is about to attach."""
+        ex = set(exclude)
+        freed = 0
+        while freed < n_blocks:
+            before = self.alloc.free_blocks
+            # evict entries one at a time until a block-bearing one goes
+            progressed = False
+            for h, e in list(self._entries.items()):
+                if h not in ex and e.block is not None \
+                        and self.alloc.refcount(e.block) == 1:
+                    self._entries.pop(h)
+                    self.alloc.release([e.block])
+                    progressed = True
+                    break
+            if not progressed:
+                break
+            freed += self.alloc.free_blocks - before
+        return freed
+
+    def flush(self) -> int:
+        """Evict every entry not pinned by a live request; returns
+        blocks released.  (Leak-freedom checks call this: after a full
+        drain + flush the allocator must be back to zero live blocks.)"""
+        freed = self.evict_blocks(self.cached_blocks)
+        # snapshot-only / blockless entries go too
+        for h, e in list(self._entries.items()):
+            if e.block is None:
+                del self._entries[h]
+        return freed
+
+
+def _mask_shared_cols(block_table: jax.Array,
+                      shared_cols: jax.Array) -> jax.Array:
+    """Route writes addressed through a slot's leading ``shared_cols``
+    table columns to the trash block.
+
+    Shared prefix blocks are attached *read-only*: gathers go through
+    the real ``block_table``, but the write path uses this masked copy,
+    so no scatter can ever land in a block another request (or the
+    prefix index) also references — whatever ``cache_index`` claims.
+    Lives inside the jitted steps so the auditor's shared-read-only
+    rule can statically see every pool-write's indices depend on the
+    shared-column count.
+    """
+    with jax.named_scope("mask_shared"):
+        cols = jnp.arange(block_table.shape[1], dtype=shared_cols.dtype)
+        return jnp.where(cols[None, :] < shared_cols[:, None],
+                         jnp.asarray(TRASH_BLOCK, block_table.dtype),
+                         block_table)
 
 
 # ---------------------------------------------------------------------------
@@ -204,6 +490,44 @@ def freeze_inactive_rows(states_old: list[Any], states_new: list[Any],
                     lambda o, n: jnp.where(
                         active.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
                     st_old, st_new))
+    return out
+
+
+def snapshot_slot_recurrent(states: list[Any], slot: jax.Array,
+                            ) -> list[Any]:
+    """Copy slot ``slot``'s recurrent rows out of the shared tree (paged
+    pools are skipped — a snapshot is O(d) per layer, not O(pool)).
+
+    Prefix caching stores these at block boundaries during prefill:
+    restoring one into a fresh slot reproduces bit-exactly the state a
+    from-scratch prefill of the same prefix would reach (the recurrent
+    prefill branches are per-token scans whose chunk boundaries cannot
+    move numerics, and rows never couple across the batch)."""
+    out = []
+    for st in states:
+        if is_paged_cache(st) or not st:
+            out.append({})
+        else:
+            out.append(jax.tree_util.tree_map(
+                lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=1),
+                st))
+    return out
+
+
+def restore_slot_recurrent(states: list[Any], snap: list[Any],
+                           slot: jax.Array) -> list[Any]:
+    """Inverse of :func:`snapshot_slot_recurrent`: splice the cached
+    recurrent rows into ``slot`` (replaces the fresh-reset a no-hit
+    admission would do)."""
+    out = []
+    for st, sn in zip(states, snap):
+        if is_paged_cache(st) or not st or not sn:
+            out.append(st)
+        else:
+            out.append(jax.tree_util.tree_map(
+                lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+                    f, o.astype(f.dtype), slot, axis=1),
+                st, sn))
     return out
 
 

@@ -64,6 +64,13 @@ class RequestQueue:
     skipped *without* losing its queue position; ``expire(now)`` removes
     and returns every entry whose deadline has passed, regardless of
     policy order.
+
+    Deadline beats backoff: an entry whose ``deadline_ms`` elapses
+    *while it is held* in its backoff window must never dispatch when
+    the hold expires — ``pop_ready`` checks expiry before backoff
+    eligibility and parks such entries for the next ``expire`` sweep
+    (they surface as ``expired``, exactly as if they had aged out in
+    the queue proper).
     """
 
     def __init__(self, maxlen: int, policy: str = "fifo"):
@@ -76,6 +83,7 @@ class RequestQueue:
         self.maxlen = maxlen
         self.policy = policy
         self._heap: list[tuple] = []
+        self._expired_held: list[QueueEntry] = []
         self._seq = 0
 
     def _key(self, e: QueueEntry) -> tuple:
@@ -87,14 +95,16 @@ class RequestQueue:
         return (e.seq,)
 
     def __len__(self) -> int:
-        return len(self._heap)
+        # held-expired entries still count: they occupy queue space
+        # until the next expire() sweep surfaces them
+        return len(self._heap) + len(self._expired_held)
 
     @property
     def depth(self) -> int:
-        return len(self._heap)
+        return len(self)
 
     def full(self) -> bool:
-        return len(self._heap) >= self.maxlen
+        return len(self) >= self.maxlen
 
     def push(self, entry: QueueEntry) -> bool:
         """Enqueue; returns False (entry NOT queued) when full."""
@@ -109,16 +119,23 @@ class RequestQueue:
         return self._seq
 
     def pop_ready(self, now: float) -> QueueEntry | None:
-        """Best entry whose retry backoff has elapsed, or None.
+        """Best non-expired entry whose retry backoff has elapsed, or
+        None.
 
         Backoff-ineligible entries keep their position: they are set
-        aside during the scan and pushed back untouched.
+        aside during the scan and pushed back untouched.  Expiry is
+        checked BEFORE backoff eligibility — an entry whose deadline
+        passed while it sat in its ``not_before`` hold is parked for
+        ``expire`` instead of ever dispatching.
         """
         deferred = []
         found = None
         while self._heap:
             item = heapq.heappop(self._heap)
             entry = item[-1]
+            if entry.deadline is not None and now >= entry.deadline:
+                self._expired_held.append(entry)
+                continue
             if entry.not_before <= now:
                 found = entry
                 break
@@ -139,27 +156,36 @@ class RequestQueue:
                 self._heap.pop()
                 heapq.heapify(self._heap)
                 return entry
+        for i, entry in enumerate(self._expired_held):
+            if entry.req.rid == rid:
+                return self._expired_held.pop(i)
         return None
 
     def expire(self, now: float) -> list[QueueEntry]:
-        """Remove and return every queued entry past its deadline."""
-        expired, kept = [], []
+        """Remove and return every queued entry past its deadline —
+        including entries ``pop_ready`` parked when their deadline
+        passed inside a retry-backoff hold."""
+        expired, kept = list(self._expired_held), []
+        self._expired_held = []
         for item in self._heap:
             entry = item[-1]
             if entry.deadline is not None and now >= entry.deadline:
                 expired.append(entry)
             else:
                 kept.append(item)
-        if expired:
+        if len(kept) != len(self._heap):
             self._heap = kept
             heapq.heapify(self._heap)
         return expired
 
     def drain(self) -> list[QueueEntry]:
-        """Remove and return everything, best-first."""
+        """Remove and return everything, best-first (held-expired
+        entries last — they are no longer dispatchable)."""
         out = []
         while self._heap:
             out.append(heapq.heappop(self._heap)[-1])
+        out.extend(self._expired_held)
+        self._expired_held = []
         return out
 
 

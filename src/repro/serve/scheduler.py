@@ -191,10 +191,22 @@ class TickResult:
 @dataclasses.dataclass
 class _PrefillJob:
     """A slot mid-prefill: the prompt streams into the paged pool in
-    chunks; the slot joins decode once the last chunk lands."""
+    chunks; the slot joins decode once the last chunk lands.
+
+    Prefix caching starts ``pos`` past the cached prefix (only the
+    uncached tail is fed).  ``hashes`` are the prompt's full-block chain
+    hashes (computed once at admission, reused at registration);
+    ``snaps`` collects recurrent-state snapshots at block boundaries;
+    ``cow_col``/``cow_dst`` are the pending copy-on-write (the fully
+    cached last prompt block must be re-run for first-token logits, so
+    it is copied into a private block before the tail chunk lands)."""
     req: Request
     prompt: list[int]
     pos: int = 0                       # prompt tokens already fed
+    hashes: list[str] = dataclasses.field(default_factory=list)
+    snaps: dict[int, object] = dataclasses.field(default_factory=dict)
+    cow_col: int = -1                  # table column awaiting COW (-1: none)
+    cow_dst: int = -1                  # private block the copy lands in
 
 
 # ---------------------------------------------------------------------------
@@ -221,12 +233,19 @@ def _mask_block_table(block_table: jax.Array, active: jax.Array):
         return block_table * active.astype(block_table.dtype)[:, None]
 
 
+# Re-exported under a module-level name so the auditor's mutation
+# self-test can knock the shared-block write protection out through
+# *this* module (the jitted steps resolve it by global lookup at trace
+# time, exactly like `_mask_block_table` above).
+_mask_shared_cols = kv_pool._mask_shared_cols
+
+
 def make_slot_step(cfg: ModelConfig, kv_len: int | None = None):
     """Build the one-dispatch-per-token engine core.
 
     (params, states, cur_tok [B,1], cache_index [B], keys [B,2],
      active [B] bool, temp [B], eos [B], gen [B], max_toks [B]
-     [, block_table [B,W]])
+     [, block_table [B,W], shared_cols [B]])
       -> (states', tok [B], cache_index', keys', active', gen', done [B])
 
     Every slot — live, finished, or never filled — flows through the
@@ -239,18 +258,27 @@ def make_slot_step(cfg: ModelConfig, kv_len: int | None = None):
     path: rows address the shared block pool through their table row.
     The step masks the table itself (``_mask_block_table``): rows not
     actively decoding write to the reserved trash block, whatever table
-    the host hands in.
+    the host hands in.  ``shared_cols`` counts each row's leading
+    prefix-cache-shared table columns: gathers read through the real
+    table, but the write path goes through a second masking
+    (``_mask_shared_cols``) that trash-routes those columns — shared
+    blocks are structurally read-only (all-zero without prefix caching,
+    so the signature, and the auditor's proof obligation, never change).
     """
     decode = make_decode_step(cfg, kv_len=kv_len)
     paged = kv_len is not None
 
     def slot_step(params, states, cur_tok, cache_index, keys, active,
-                  temp, eos, gen, max_toks, block_table=None):
+                  temp, eos, gen, max_toks, block_table=None,
+                  shared_cols=None):
         step_keys = jax.vmap(jax.random.fold_in)(keys, gen - 1)
+        write_table = None
         if paged:
             block_table = _mask_block_table(block_table, active)
+            write_table = _mask_shared_cols(block_table, shared_cols)
         logits, new_states = decode(params, states, cur_tok, cache_index,
-                                    block_table=block_table)
+                                    block_table=block_table,
+                                    write_table=write_table)
         if paged:
             # chunked prefill streams prompts in *between* decode steps:
             # a mid-prefill row's recurrent state must not move under it
@@ -303,12 +331,18 @@ class ContinuousBatchingScheduler:
                  max_len: int = 128, prepack: bool | None = None,
                  kv_block_size: int = 0, num_kv_blocks: int = 0,
                  chunked_prefill: bool = False,
-                 mesh: jax.sharding.Mesh | None = None):
+                 mesh: jax.sharding.Mesh | None = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_entries: int = 0):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if chunked_prefill and kv_block_size <= 0:
             raise ValueError(
                 "chunked_prefill streams prompts through the paged pool; "
+                "set kv_block_size > 0 to enable it")
+        if prefix_cache and kv_block_size <= 0:
+            raise ValueError(
+                "prefix_cache shares paged pool blocks between requests; "
                 "set kv_block_size > 0 to enable it")
         self.engine = ServeEngine(cfg, params, max_len=max_len,
                                   prepack=prepack, mesh=mesh)
@@ -340,7 +374,19 @@ class ContinuousBatchingScheduler:
                 lambda states, slot: kv_pool.reset_slot_recurrent(
                     cfg_, states, slot, ml_),
                 donate_argnums=(0,))
+            self.prefix_caching = prefix_cache
+            self._prefix_entries = (prefix_cache_entries
+                                    or self.num_kv_blocks)
+            if prefix_cache:
+                self._cow_copy = jax.jit(self._cow_copy_impl,
+                                         donate_argnums=(0,))
+                # snapshots are read back later, so the source tree is
+                # NOT donated here (restore donates normally)
+                self._snap_slot = jax.jit(kv_pool.snapshot_slot_recurrent)
+                self._restore_slot = jax.jit(
+                    kv_pool.restore_slot_recurrent, donate_argnums=(0,))
         else:
+            self.prefix_caching = False
             self._step = jax.jit(make_slot_step(self.cfg),
                                  donate_argnums=_STEP_DONATE)
             self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
@@ -354,11 +400,22 @@ class ContinuousBatchingScheduler:
                 block_size=self.block_size)
             self._alloc = kv_pool.BlockAllocator(self.num_kv_blocks)
             self._block_table = np.zeros((b, self.table_width), np.int32)
+            self._shared_cols = np.zeros((b,), np.int32)
             self._slot_blocks: list[list[int]] = [[] for _ in range(b)]
             self._prefills: dict[int, _PrefillJob] = {}
+            self._prefix: kv_pool.PrefixCache | None = None
+            if self.prefix_caching:
+                # the hash root folds in model/config identity + block
+                # size, so entries can never match across engines whose
+                # numerics (or block geometry) differ
+                self._prefix = kv_pool.PrefixCache(
+                    self._alloc, self.block_size,
+                    capacity=self._prefix_entries,
+                    root=f"{self.cfg!r}/bs={self.block_size}")
         else:
             self.states = lm.init_state(self.cfg, b, self.max_len)
             self._prefills = {}
+            self._prefix = None
         if self.mesh is not None:
             self.states = kv_pool.place_serve_states(self.states, self.mesh)
         # host mirrors of the per-slot lanes (tiny; re-shipped per step)
@@ -374,6 +431,29 @@ class ContinuousBatchingScheduler:
         self._slot_toks: list[list[int]] = [[] for _ in range(b)]
         self._slot_admitted = np.zeros((b,), np.int64)
         self._events: list[tuple[int, int, int]] = []
+
+    @staticmethod
+    def _cow_copy_impl(states, src, dst):
+        """Copy pool block ``src`` into ``dst`` across every paged
+        group (whole-block K/V copy: each row of a fully-cached prompt
+        block is valid prompt K/V, so copying all ``block_size``
+        positions is bit-safe).  The copy-on-write escape for a
+        fully-cached prompt: the last prompt position must be re-run
+        for first-token logits, and its write lands in the private
+        copy, never the shared original."""
+        with jax.named_scope("cow_copy"):
+            out = []
+            for st in states:
+                if kv_pool.is_paged_cache(st):
+                    st = dict(st)
+                    for name in ("k_pool", "v_pool"):
+                        pool = st[name]
+                        row = jax.lax.dynamic_slice_in_dim(
+                            pool, src, 1, axis=1)
+                        st[name] = jax.lax.dynamic_update_slice_in_dim(
+                            pool, row, dst, axis=1)
+                out.append(st)
+            return out
 
     @staticmethod
     def _insert_impl(full_states, one_states, slot):
@@ -394,12 +474,18 @@ class ContinuousBatchingScheduler:
         prompt length."""
         cfg, max_len = self.cfg, self.max_len
 
-        def chunk_prefill(params, states, tokens, start, table_row, slot):
+        def chunk_prefill(params, states, tokens, start, table_row, slot,
+                          shared_cols):
+            # same read/write split as the decode step: the tail chunk
+            # of a prefix-cache hit must *attend* the shared K/V but its
+            # scatters must never land in a shared block
+            write_row = _mask_shared_cols(table_row, shared_cols)
             one = kv_pool.slot_states_view(cfg, states, slot)
             logits, one, _ = lm.forward(
                 params, tokens, cfg, states=one,
                 cache_index=jnp.reshape(start, (1,)),
-                block_table=table_row, last_only=True, kv_len=max_len)
+                block_table=table_row, last_only=True, kv_len=max_len,
+                write_table=write_row)
             states = kv_pool.slot_states_merge(cfg, states, one, slot)
             return states, logits
 
@@ -413,11 +499,38 @@ class ContinuousBatchingScheduler:
         return kv_pool.blocks_needed(len(req.prompt), req.max_tokens,
                                      self.block_size)
 
+    def _prefix_peek(self, req: Request) -> tuple[int, list[str], bool]:
+        """Non-mutating cache lookup for ``req``: (matched blocks,
+        chain hashes, needs-COW).  Recurrent stacks resume only at a
+        snapshot-bearing boundary strictly before the last prompt token;
+        dense stacks can consume a *fully* cached prompt by
+        copy-on-writing its last block (the tail re-runs just position
+        ``prompt_len - 1`` for first-token logits)."""
+        assert self._prefix is not None
+        plen = len(req.prompt)
+        hashes = self._prefix.hashes(req.prompt)
+        if self._has_recurrent:
+            n = self._prefix.match(hashes, need_snapshot=True,
+                                   limit=(plen - 1) // self.block_size)
+            return n, hashes, False
+        n = self._prefix.match(hashes)
+        cow = n > 0 and n * self.block_size == plen
+        return n, hashes, cow
+
     def blocks_needed(self, req: Request) -> int:
-        """KV blocks ``req`` would own for its lifetime (0 on the
-        contiguous layout or for pure-recurrent stacks) — the front-end's
-        cost-aware admission reads this against ``free_blocks``."""
-        return self._blocks_for(req) if self.paged else 0
+        """KV blocks admission would *newly allocate* for ``req`` (0 on
+        the contiguous layout or for pure-recurrent stacks) — the
+        front-end's cost-aware admission reads this against
+        ``free_blocks``.  With prefix caching this is the post-cache-hit
+        private footprint: total minus shared attachments, plus one for
+        the copy-on-write destination when the whole prompt is cached."""
+        if not self.paged:
+            return 0
+        total = self._blocks_for(req)
+        if self._prefix is None or total == 0:
+            return total
+        n, _, cow = self._prefix_peek(req)
+        return total - n + (1 if cow else 0)
 
     def validate_request(self, req: Request) -> None:
         """Typed up-front validation: :class:`InvalidRequest` for
@@ -455,9 +568,16 @@ class ContinuousBatchingScheduler:
 
     @property
     def free_blocks(self) -> int:
-        """Unallocated KV blocks (the whole pool when contiguous —
-        admission is then slot-bound only)."""
-        return self._alloc.free_blocks if self.paged else 0
+        """KV blocks admission can spend right now: unallocated blocks
+        plus — with prefix caching — cached blocks no live request
+        references (evictable on demand).  The whole pool when
+        contiguous — admission is then slot-bound only."""
+        if not self.paged:
+            return 0
+        free = self._alloc.free_blocks
+        if self._prefix is not None:
+            free += self._prefix.evictable_blocks
+        return free
 
     @property
     def total_blocks(self) -> int:
@@ -465,13 +585,22 @@ class ContinuousBatchingScheduler:
 
     def can_fund(self, req: Request) -> bool:
         """Whether admission could succeed *right now* (a free slot and,
-        when paged, enough free blocks).  Purely advisory — the pool
-        only moves when ``start_request`` commits."""
+        when paged, enough free + evictable blocks net of the request's
+        cache hit).  Purely advisory — the pool only moves when
+        ``start_request`` commits."""
         if self._free_slot() is None:
             return False
-        if self.paged:
+        if not self.paged:
+            return True
+        if self._prefix is None:
             return self._alloc.can_alloc(self._blocks_for(req))
-        return True
+        total = self._blocks_for(req)
+        if total == 0:
+            return True
+        n, hashes, cow = self._prefix_peek(req)
+        need = total - n + (1 if cow else 0)
+        return need <= self._alloc.free_blocks \
+            + self._prefix.evictable_margin(exclude=hashes[:n])
 
     def in_flight(self) -> list[int]:
         """rids currently holding a slot (decoding or mid-prefill)."""
@@ -498,8 +627,8 @@ class ContinuousBatchingScheduler:
         if self.paged:
             if not self._admit_paged(slot, req, step):
                 raise PoolExhausted(
-                    f"request {req.rid}: needs {self._blocks_for(req)} KV "
-                    f"blocks, pool has {self._alloc.free_blocks} free")
+                    f"request {req.rid}: needs {self.blocks_needed(req)} "
+                    f"KV blocks, pool has {self.free_blocks} free")
             return None
         return self._admit(slot, req, step)
 
@@ -539,23 +668,78 @@ class ContinuousBatchingScheduler:
     def _admit_paged(self, slot: int, req: Request, step: int) -> bool:
         """Claim ``slot`` and the request's KV blocks; prefill happens
         incrementally via ``_feed_prefills``.  Returns False (leaving
-        the allocator untouched) when the pool cannot fund the request
-        yet — the caller keeps it queued FIFO."""
-        need = self._blocks_for(req)
-        ids = self._alloc.alloc(need)
+        the allocator and prefix index untouched) when the pool cannot
+        fund the request yet — the caller keeps it queued FIFO.
+
+        With prefix caching: look up the longest cached prefix, attach
+        its blocks read-only (an extra allocator reference each), evict
+        idle cache entries if the free list alone cannot fund the
+        private tail, and allocate only the post-hit footprint.  A fully
+        cached prompt additionally reserves one block as the
+        copy-on-write destination (the copy itself is deferred to
+        ``_feed_prefills`` so it sits behind the same fault-injection
+        point as any other prefill dispatch)."""
+        total = self._blocks_for(req)
+        plen = len(req.prompt)
+        n_match, hashes, cow = 0, [], False
+        if self._prefix is not None:
+            n_match, hashes, cow = self._prefix_peek(req)
+        shared: list[int] = []
+        if n_match and self._has_kv:
+            private = total - n_match + (1 if cow else 0)
+        else:
+            private = total
+        if self._prefix is not None \
+                and self._alloc.free_blocks < private:
+            self._prefix.evict_blocks(
+                private - self._alloc.free_blocks,
+                exclude=hashes[:n_match])
+        if n_match and self._has_kv:
+            shared = self._prefix.attach(hashes[:n_match])
+        ids = self._alloc.alloc(private)
         if ids is None:
+            if shared:                 # roll back: admission is atomic
+                self._alloc.release(shared)
             return False
-        self._slot_blocks[slot] = ids
+        cow_dst = -1
+        table_private = ids
+        if cow:
+            cow_dst, table_private = ids[0], ids[1:]
+        row = shared + table_private
+        self._slot_blocks[slot] = shared + ids
         self._block_table[slot, :] = 0
-        self._block_table[slot, :len(ids)] = ids
+        self._block_table[slot, :len(row)] = row
+        self._shared_cols[slot] = len(shared)
+        # resume point: a fully-cached dense prompt re-runs only its
+        # last token (COW gives the write somewhere private to land);
+        # otherwise the tail starts at the first uncached block edge
+        tail_start = min(n_match * self.block_size, plen - 1) \
+            if cow else n_match * self.block_size
         if self._has_recurrent:
-            # chunked prefill accumulates prompt state in the slot's
-            # recurrent rows — scrub the retired occupant's state first
+            snap = None
+            if n_match:
+                snap = self._prefix.snapshot_at(hashes[n_match - 1])
             with self.engine.mesh_ctx():
-                self.states = self._reset_slot(self.states,
-                                               jnp.int32(slot))
+                if snap is not None:
+                    # splice the cached recurrent rows in: bit-exactly
+                    # the state a from-scratch prefill of the prefix
+                    # would reach
+                    self.states = self._restore_slot(self.states, snap,
+                                                     jnp.int32(slot))
+                else:
+                    # chunked prefill accumulates prompt state in the
+                    # slot's recurrent rows — scrub the retired
+                    # occupant's state first
+                    self.states = self._reset_slot(self.states,
+                                                   jnp.int32(slot))
+        if self._prefix is not None and tail_start > 0:
+            self._prefix.hits += 1
+            self._prefix.tokens_skipped += tail_start
+            self._prefix.blocks_shared += len(shared)
         prompt = list(int(t) for t in req.prompt)
-        self._prefills[slot] = _PrefillJob(req=req, prompt=prompt)
+        self._prefills[slot] = _PrefillJob(
+            req=req, prompt=prompt, pos=tail_start, hashes=hashes,
+            cow_col=(n_match - 1) if cow else -1, cow_dst=cow_dst)
         self._slot_req[slot] = req
         self._slot_toks[slot] = []
         self._slot_admitted[slot] = step
@@ -563,9 +747,38 @@ class ContinuousBatchingScheduler:
 
     def _retire_paged_slot(self, slot: int) -> None:
         if self._slot_blocks[slot]:
-            self._alloc.free(self._slot_blocks[slot])
+            # drops one reference per block: privately-owned blocks
+            # return to the free list, shared/cached ones stay live
+            # under the prefix index's (or another slot's) reference
+            self._alloc.release(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
         self._block_table[slot, :] = 0
+        self._shared_cols[slot] = 0
+
+    def _register_prefix(self, slot: int, pf: _PrefillJob) -> None:
+        """Index every full prompt block of a completed prefill (the
+        attached shared prefix dedupes against its existing entries).
+        The slot's write protection then widens to cover all cached
+        columns — decode writes start strictly past the prompt, so this
+        is purely defensive, and it makes cached blocks structurally
+        read-only even for the request that registered them."""
+        n_full = len(pf.hashes)
+        if self._prefix is None or n_full == 0:
+            return
+        if self._has_kv:
+            blocks = [int(self._block_table[slot, i])
+                      for i in range(n_full)]
+        else:
+            blocks = [None] * n_full
+        self._prefix.register(
+            pf.hashes, blocks,
+            pf.snaps if self._has_recurrent else None)
+        if self._has_kv:
+            # decode writes start strictly past the prompt (columns
+            # >= ceil-of-prompt), so masking every full prompt column
+            # can never reroute a legitimate write
+            self._shared_cols[slot] = max(
+                int(self._shared_cols[slot]), n_full)
 
     def _feed_prefills(self, step: int, out: dict[int, Completion],
                        fault_hook: Callable[[str, int | None], None]
@@ -585,18 +798,48 @@ class ContinuousBatchingScheduler:
             pf = self._prefills[slot]
             if fault_hook is not None:
                 fault_hook("chunk", pf.req.rid)
+            if pf.cow_col >= 0:
+                # deferred copy-on-write for a fully-cached prompt: copy
+                # the shared last block into the reserved private one,
+                # repoint the table column, and drop the shared
+                # reference.  Runs *after* the fault hook — a raise
+                # leaves the table still pointing at the shared block
+                # (which shared_cols still write-protects) and the
+                # reserved block in _slot_blocks, so cancel cleans up.
+                src = int(self._block_table[slot, pf.cow_col])
+                with self.engine.mesh_ctx():
+                    self.states = self._cow_copy(
+                        self.states, jnp.int32(src),
+                        jnp.int32(pf.cow_dst))
+                self._block_table[slot, pf.cow_col] = pf.cow_dst
+                self._shared_cols[slot] = pf.cow_col
+                self._slot_blocks[slot].remove(src)
+                self._alloc.release([src])
+                pf.cow_col = pf.cow_dst = -1
+                dispatches += 1
             chunk = self.block_size if self.chunked_prefill \
                 else len(pf.prompt)
             c = min(chunk, len(pf.prompt) - pf.pos)
             toks = jnp.asarray(pf.prompt[pf.pos:pf.pos + c],
                                jnp.int32)[None]
             table_row = jnp.asarray(self._block_table[slot:slot + 1])
+            shared_row = jnp.asarray(self._shared_cols[slot:slot + 1])
             with self.engine.mesh_ctx():
                 self.states, logits = self._chunk_prefill(
                     self.params, self.states, toks, jnp.int32(pf.pos),
-                    table_row, jnp.int32(slot))
+                    table_row, jnp.int32(slot), shared_row)
             pf.pos += c
             dispatches += 1
+            if self._prefix is not None and self._has_recurrent \
+                    and pf.pos % self.block_size == 0:
+                # chunk landed exactly on a block edge: snapshot the
+                # slot's recurrent rows so the entry for this prefix is
+                # resumable (small copies; the state tree is not donated)
+                i = pf.pos // self.block_size - 1
+                if i < len(pf.hashes) and pf.hashes[i] not in self._prefix:
+                    with self.engine.mesh_ctx():
+                        pf.snaps[i] = self._snap_slot(self.states,
+                                                      jnp.int32(slot))
             if pf.pos < len(pf.prompt):
                 continue
 
@@ -604,6 +847,7 @@ class ContinuousBatchingScheduler:
             # the monolithic admission path does
             del self._prefills[slot]
             req = pf.req
+            self._register_prefix(slot, pf)
             key = jax.random.PRNGKey(req.seed)
             tok0 = int(sample_token(logits, key, req.temperature)[0, 0])
             if tok0 == req.eos_id or req.max_tokens == 1:
@@ -654,8 +898,12 @@ class ContinuousBatchingScheduler:
             if self.paged:
                 # the jitted step masks the table against `active` itself
                 # (_mask_block_table), so non-decoding rows' writes land
-                # in the trash block no matter what the host passes here
-                step_args += (jnp.asarray(self._block_table),)
+                # in the trash block no matter what the host passes here;
+                # shared_cols additionally trash-routes writes into
+                # prefix-cache-shared columns (all zeros when prefix
+                # caching is off — same compiled shape either way)
+                step_args += (jnp.asarray(self._block_table),
+                              jnp.asarray(self._shared_cols))
             with self.engine.mesh_ctx():
                 (self.states, tok, cache_index, keys, active, gen,
                  done) = self._step(*step_args)
@@ -815,6 +1063,32 @@ class ContinuousBatchingScheduler:
         (contiguous windows or the shared paged pool)."""
         return kv_pool.kv_cache_bytes(self.states)
 
+    @property
+    def prefix_cached_blocks(self) -> int:
+        """Pool blocks currently pinned by the prefix index (0 when
+        prefix caching is off)."""
+        return self._prefix.cached_blocks if self._prefix else 0
+
+    def flush_prefix_cache(self) -> int:
+        """Drop every prefix-cache entry not pinned by a live request;
+        returns blocks released.  After ``drain()`` + this, the
+        allocator must be back to zero live blocks — the leak-freedom
+        check the chaos suite pins."""
+        return self._prefix.flush() if self._prefix else 0
+
+    def prefix_stats(self) -> dict[str, int]:
+        """Lifetime prefix-cache counters (all zero when off):
+        admissions that skipped prefill work, prompt tokens skipped,
+        shared-block attachments, entries and blocks currently held."""
+        if self._prefix is None:
+            return {"hits": 0, "tokens_skipped": 0, "blocks_shared": 0,
+                    "entries": 0, "cached_blocks": 0}
+        return {"hits": self._prefix.hits,
+                "tokens_skipped": self._prefix.tokens_skipped,
+                "blocks_shared": self._prefix.blocks_shared,
+                "entries": len(self._prefix),
+                "cached_blocks": self._prefix.cached_blocks}
+
 
 # ---------------------------------------------------------------------------
 # Synthetic workloads (arrival traces for benchmarks / the launcher)
@@ -828,6 +1102,7 @@ def synthetic_workload(n_requests: int, vocab_size: int, *,
                        poisson_rate: float = 0.0,
                        priority_choices: Sequence[int] = (0,),
                        deadline_ms: float | None = None,
+                       shared_prefix_len: int = 0,
                        ) -> list[Request]:
     """A seeded trace of requests with varied lengths/arrivals.
 
@@ -848,8 +1123,17 @@ def synthetic_workload(n_requests: int, vocab_size: int, *,
     (which may or may not ever be sampled — both paths are exercised);
     ``priority_choices``/``deadline_ms`` stamp the front-end metadata
     fields uniformly at random / uniformly on all requests.
+
+    ``shared_prefix_len > 0`` models the multi-turn/system-prompt
+    workload prefix caching targets: one fixed token prefix of that
+    length is drawn per seed, and every prompt either *is* a slice of
+    it (``plen <= shared_prefix_len`` — including full-prompt hits, the
+    copy-on-write path) or extends it with a random tail — so traces
+    exercise partial, exact, and divergent prefix matches.
     """
     rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab_size, size=shared_prefix_len).tolist() \
+        if shared_prefix_len > 0 else []
     t = 0.0
     reqs = []
     for i in range(n_requests):
@@ -860,8 +1144,15 @@ def synthetic_workload(n_requests: int, vocab_size: int, *,
         plen = int(rng.integers(1, max_prompt + 1))
         eos = int(rng.integers(0, vocab_size)) \
             if rng.random() < eos_rate else -1
+        if shared_prefix_len > 0:
+            prompt = prefix[:plen] if plen <= shared_prefix_len else \
+                prefix + rng.integers(
+                    0, vocab_size,
+                    size=plen - shared_prefix_len).tolist()
+        else:
+            prompt = rng.integers(0, vocab_size, size=plen).tolist()
         reqs.append(Request(
-            prompt=rng.integers(0, vocab_size, size=plen).tolist(),
+            prompt=prompt,
             max_tokens=int(rng.integers(1, max_new + 1)),
             temperature=float(rng.choice(list(temperature_choices))),
             eos_id=eos, seed=int(rng.integers(0, 2**31 - 1)),

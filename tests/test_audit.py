@@ -152,11 +152,13 @@ def test_micro_graphs_audit_clean():
     assert check_graphs(build_micro_graphs()) == []
 
 
-def test_mutation_is_detected():
-    # one end-to-end knock-out inside pytest: drop the block-table mask
-    # and the masked-scatter rule must fire on the rebuilt graph
+@pytest.mark.parametrize("name", ["drop-table-mask", "drop-shared-mask"])
+def test_mutation_is_detected(name):
+    # end-to-end knock-outs inside pytest: drop the block-table mask
+    # (masked-scatter must fire) and the shared-column write mask
+    # (shared-read-only must fire) on the rebuilt graph
     muts = {m.name: m for m in all_mutations()}
-    m = muts["drop-table-mask"]
+    m = muts[name]
     with _applied(m.patches()):
         graphs = build_cell(**m.cell)
         violations = []

@@ -43,34 +43,50 @@ def _sched(key="paged"):
                   num_kv_blocks=12, chunked_prefill=True)
         if key == "contig":
             kw = dict(num_slots=2, max_len=32)
+        elif key == "prefix":
+            kw["prefix_cache"] = True
         _SCHED_CACHE[key] = ContinuousBatchingScheduler(cfg, params, **kw)
     return _SCHED_CACHE[key]
 
 
 def _assert_allocator_invariants(sched):
-    """No leaked blocks, no double-assign, tables scrubbed."""
+    """No leaked blocks, no double-assign, tables scrubbed.
+
+    With prefix caching on, the cache may legitimately pin blocks after
+    a drain — then the free list and the cache-owned blocks must exactly
+    partition the pool (every cached block at refcount 1, nothing
+    counted twice, nothing lost)."""
     assert sched.in_flight() == [] and not sched._prefills
     assert not sched._active.any()
     if not sched.paged:
         return
     alloc = sched._alloc
-    assert alloc.live_blocks == 0
+    cached_ids = sorted(
+        e.block for e in sched._prefix._entries.values()
+        if e.block is not None) if getattr(sched, "_prefix", None) else []
+    assert alloc.live_blocks == len(cached_ids)
+    assert sched.prefix_cached_blocks == len(cached_ids)
+    assert all(alloc.refcount(b) == 1 for b in cached_ids)
     free = list(alloc._free) if hasattr(alloc, "_free") else None
     if free is not None:
-        assert sorted(free) == list(range(1, sched.num_kv_blocks + 1))
         assert len(set(free)) == len(free)          # no double-entry
+        assert sorted(free + cached_ids) == \
+            list(range(1, sched.num_kv_blocks + 1))
     assert (sched._block_table == 0).all()
     assert all(not b for b in sched._slot_blocks)
 
 
-def _run_storm(sched, seed, *, n=10, retry=None, policy=None):
+def _run_storm(sched, seed, *, n=10, retry=None, policy=None,
+               max_prompt=6, shared_prefix_len=0):
     fe = ServeFrontend(
         sched, clock=VirtualClock(), max_queue=16,
         retry=retry or RetryPolicy(max_retries=4, backoff_s=0.02, seed=seed),
         chaos=policy or ChaosPolicy(seed=seed, **STORM))
     trace = synthetic_workload(n, small_test_config().vocab_size,
-                               max_prompt=6, max_new=8, eos_rate=0.3,
-                               poisson_rate=150.0, seed=seed + 100)
+                               max_prompt=max_prompt, max_new=8,
+                               eos_rate=0.3, poisson_rate=150.0,
+                               shared_prefix_len=shared_prefix_len,
+                               seed=seed + 100)
     handles = fe.serve_trace(trace)
     return fe, trace, handles, fe.results(handles)
 
@@ -137,6 +153,32 @@ def test_retried_requests_never_duplicate_stream_tokens():
                 retried_ok += 1
         _assert_allocator_invariants(sched)
     assert retried_ok > 0         # the interesting path actually ran
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_prefix_cache_storm_refcounts_balance(seed):
+    """The full storm over shared-prefix traffic with prefix caching on:
+    faults land mid-chunk and mid-COW (the chunk fault hook fires before
+    the copy-on-write executes), victims retry against a now-warm cache,
+    and afterwards the refcount ledger must balance exactly — only
+    cache-owned blocks live, all at refcount 1, and a flush hands every
+    one of them back."""
+    sched = _sched("prefix")
+    fe, trace, handles, res = _run_storm(sched, seed, max_prompt=8,
+                                         shared_prefix_len=8)
+    assert set(res) == {r.rid for r in trace}
+    by_rid = {r.rid: r for r in trace}
+    n_ok = 0
+    for rid, r in res.items():
+        if r.status == "ok":
+            n_ok += 1
+            assert r.tokens == oracle_completion(sched.engine, by_rid[rid])
+    assert n_ok > 0                       # the storm is survivable
+    _assert_allocator_invariants(sched)
+    sched.flush_prefix_cache()
+    assert sched._alloc.live_blocks == 0
+    assert sched.prefix_cached_blocks == 0
+    _assert_allocator_invariants(sched)
 
 
 def test_admission_stall_applies_backpressure_not_crash():

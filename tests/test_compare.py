@@ -65,8 +65,43 @@ def test_new_metric_is_informational():
 
 
 def test_pct_change_zero_baseline():
+    # the raw helper still reports inf (callers may want the truth) —
+    # compare() itself never gates on it (absolute fallback below)
     assert pct_change(0.0, 0.0) == 0.0
     assert pct_change(0.0, 1.0) == float("inf")
+
+
+def test_zero_baseline_gates_on_absolute_difference():
+    """A zero baseline must never produce an infinite-regression
+    verdict: the gate falls back to the absolute difference against
+    ``abs_tolerance``, direction-aware like the percent path."""
+    base = {"chaos.faults": (0.0, "count"), "skip.toks": (0.0, "tokens"),
+            "idle.us": (0.0, "us")}
+    # exactly-zero fresh values: ok, not inf
+    rows, bad = compare(base, dict(base), tolerance=25.0, ignore=[])
+    assert not bad
+    assert all(r[4] == "✓ ok" for r in rows)
+    assert all("inf" not in r[3] for r in rows)
+    # count/tokens are rate-like (higher is better): 0 -> 2 improves
+    fresh = {"chaos.faults": (2.0, "count"), "skip.toks": (0.0, "tokens"),
+             "idle.us": (0.0, "us")}
+    rows, bad = compare(base, fresh, tolerance=25.0, ignore=[])
+    assert not bad
+    by_name = {r[0]: (r[3], r[4]) for r in rows}
+    assert by_name["chaos.faults"] == ("+2 abs", "✅ improved")
+    # a lower-is-better unit moving off a zero baseline IS a regression,
+    # reported with a finite absolute delta
+    fresh = dict(base, **{"idle.us": (3.0, "us")})
+    rows, bad = compare(base, fresh, tolerance=25.0, ignore=[])
+    assert bad
+    by_name = {r[0]: (r[3], r[4]) for r in rows}
+    delta, status = by_name["idle.us"]
+    assert delta == "+3 abs" and status.startswith("❌ regressed")
+    assert "inf" not in delta
+    # a wide abs_tolerance absorbs the drift
+    rows, bad = compare(base, fresh, tolerance=25.0, ignore=[],
+                        abs_tolerance=5.0)
+    assert not bad
 
 
 def test_markdown_renders_every_row():

@@ -268,6 +268,61 @@ def test_mid_decode_deadline_yields_truncated_prefix_and_spares_peer():
     _assert_clean(sched)
 
 
+def test_deadline_beats_backoff_hold_in_queue():
+    """Regression (ISSUE 8 satellite): an entry whose deadline elapses
+    while it is held in its retry-backoff window must surface as
+    ``expired`` at the next sweep, never dispatch when the hold ends."""
+    from repro.serve.policies import QueueEntry, RequestQueue
+    q = RequestQueue(maxlen=4)
+    e = QueueEntry(req=Request([1], max_tokens=2, rid=7),
+                   deadline=1.0, not_before=5.0)
+    assert q.push(e)
+    # inside both windows: held by backoff, keeps its position
+    assert q.pop_ready(0.5) is None and len(q) == 1
+    # backoff elapsed but the deadline passed during the hold — the old
+    # code dispatched here; it must park instead
+    assert q.pop_ready(6.0) is None
+    assert len(q) == 1 and q.full() is False   # still occupies space
+    assert q.expire(6.0) == [e]
+    assert len(q) == 0 and q.drain() == []
+
+
+def test_fault_retry_expiring_in_backoff_surfaces_as_expired():
+    """End-to-end: a fault victim re-queued under a long backoff whose
+    deadline passes during the hold resolves ``expired`` — not ``ok``
+    from a ghost dispatch, not stuck forever."""
+    from repro.serve.errors import FaultInjected
+    from repro.serve.policies import RetryPolicy
+    sched = _sched()
+    # backoff far longer than the deadline, deterministic (no jitter)
+    fe = _fe(sched, retry=RetryPolicy(max_retries=2, backoff_s=10.0,
+                                      jitter=0.0))
+    h = fe.submit(Request([1, 2, 3], max_tokens=8, seed=11, rid=0),
+                  deadline_ms=200.0)
+    for _ in range(3):
+        fe._pump()
+        fe.clock.advance(0.01)
+    assert not h.done and 0 in fe._inflight
+    # fault it: cancelled + re-queued with not_before ≈ now + 10s
+    fe._fault_victim(0, FaultInjected("injected", rid=0, point="decode"),
+                     fe.clock())
+    assert not h.done and len(fe.queue) == 1
+    assert fe.metrics.snapshot()["serve.retries"] == 1
+    # the deadline (t≈0.2s) passes while the entry is held; pumps after
+    # that must park-and-expire it, never admit it
+    for _ in range(40):
+        fe._pump()
+        fe.clock.advance(0.01)
+        if h.done:
+            break
+    r = h.result_nowait()
+    assert r.status == "expired"
+    assert "expired" in str(r.error)
+    assert fe.metrics.snapshot()["serve.expired"] == 1
+    assert len(fe.queue) == 0
+    _assert_clean(sched)
+
+
 # ---------------------------------------------------------------------------
 # Cancellation / drain / close / preemption
 # ---------------------------------------------------------------------------

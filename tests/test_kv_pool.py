@@ -16,6 +16,8 @@ from hypothesis import given, settings, strategies as st
 from repro.config import small_test_config
 from repro.models import attention, lm
 from repro.serve import kv_pool
+from repro.serve.errors import (BlockAllocatorError, BlockNotLive,
+                                BlockOutOfRange)
 
 
 # ---------------------------------------------------------------------------
@@ -48,8 +50,39 @@ def test_allocator_rejects_double_free_and_foreign_ids():
     a.free(ids)
     with pytest.raises(ValueError, match="not live"):
         a.free(ids)                          # double free
-    with pytest.raises(ValueError, match="not live"):
+    with pytest.raises(ValueError, match="not a pool block"):
         a.free([99])                         # never allocated
+    # typed: both are BlockAllocatorError subclasses AND ValueErrors,
+    # so legacy except-ValueError callers still catch them
+    with pytest.raises(BlockNotLive):
+        a.free(ids)
+    with pytest.raises(BlockOutOfRange):
+        a.free([99])
+    with pytest.raises(BlockAllocatorError):
+        a.free([kv_pool.TRASH_BLOCK])        # trash block is never freeable
+    assert a.free_blocks == 4                # errors moved nothing
+
+
+def test_allocator_refcounts_share_and_release():
+    """acquire/release semantics: a block returns to the free list only
+    when its LAST reference drops; acquire validates before mutating."""
+    a = kv_pool.BlockAllocator(4)
+    ids = a.alloc(2)
+    a.acquire(ids)                           # refcount 2 each
+    assert all(a.refcount(i) == 2 for i in ids)
+    a.release(ids)                           # back to 1 — still live
+    assert a.free_blocks == 2 and a.live_blocks == 2
+    a.release(ids)                           # last refs — freed
+    assert a.free_blocks == 4 and a.live_blocks == 0
+    with pytest.raises(BlockNotLive, match="not live"):
+        a.acquire(ids)                       # can't acquire a free block
+    with pytest.raises(BlockOutOfRange):
+        a.acquire([kv_pool.TRASH_BLOCK])
+    # acquire validates ALL ids before incrementing ANY refcount
+    live = a.alloc(1)
+    with pytest.raises(BlockNotLive):
+        a.acquire(live + [live[0] + 1])      # second id is free
+    assert a.refcount(live[0]) == 1          # first id untouched
 
 
 @given(seed=st.integers(0, 2**31 - 1),
@@ -81,6 +114,51 @@ def test_allocator_never_double_assigns(seed, num_blocks):
         assert a.free_blocks == num_blocks - len(live)
 
 
+@given(seed=st.integers(0, 2**31 - 1),
+       num_blocks=st.sampled_from([1, 3, 8, 17]))
+@settings(max_examples=20, deadline=None)
+def test_allocator_refcount_property(seed, num_blocks):
+    """Random admit/acquire/release traces against a reference refcount
+    model: ids stay unique and in range, block 0 is never handed out or
+    freed, and free/live accounting matches the model at every step."""
+    rng = np.random.default_rng(seed)
+    a = kv_pool.BlockAllocator(num_blocks)
+    refs: dict[int, int] = {}               # reference model
+    for _ in range(300):
+        op = rng.random()
+        if refs and op < 0.3:               # drop one ref somewhere
+            blk = int(rng.choice(sorted(refs)))
+            a.release([blk])
+            refs[blk] -= 1
+            if refs[blk] == 0:
+                del refs[blk]
+        elif refs and op < 0.5:             # share an existing block
+            blk = int(rng.choice(sorted(refs)))
+            a.acquire([blk])
+            refs[blk] += 1
+        else:
+            want = int(rng.integers(1, num_blocks + 1))
+            ids = a.alloc(want)
+            if ids is None:
+                assert want > a.free_blocks
+                continue
+            assert len(set(ids)) == len(ids)
+            assert all(i in range(1, num_blocks + 1) and i not in refs
+                       for i in ids), "re-assigned a live block"
+            for i in ids:
+                refs[i] = 1
+        assert kv_pool.TRASH_BLOCK not in refs
+        assert kv_pool.TRASH_BLOCK not in a._free
+        assert a.live_blocks == len(refs)
+        assert a.free_blocks == num_blocks - len(refs)
+        for blk, n in refs.items():
+            assert a.refcount(blk) == n
+    # releasing every outstanding ref drains the pool completely
+    for blk, n in list(refs.items()):
+        a.release([blk] * n)
+    assert a.free_blocks == num_blocks and a.live_blocks == 0
+
+
 def test_blocks_needed_accounting():
     # prompt 1 + 1 generated token: only the prompt position is written
     assert kv_pool.blocks_needed(1, 1, 4) == 1
@@ -91,6 +169,98 @@ def test_blocks_needed_accounting():
     assert kv_pool.blocks_needed(5, 3, 1) == 7
     assert kv_pool.table_width(32, 4) == 8
     assert kv_pool.table_width(33, 4) == 9
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache: chain hashing, match/attach/register lifecycle, eviction
+# ---------------------------------------------------------------------------
+
+def test_prefix_chain_hashes_identify_whole_prefixes():
+    h1 = kv_pool.prefix_chain_hashes([1, 2, 3, 4, 5, 6, 7], 4)
+    assert len(h1) == 1                      # only FULL blocks hash
+    h2 = kv_pool.prefix_chain_hashes([1, 2, 3, 4, 9, 9, 9, 9], 4)
+    assert h2[0] == h1[0]                    # same first block
+    h3 = kv_pool.prefix_chain_hashes([1, 2, 3, 5, 9, 9, 9, 9], 4)
+    assert h3[0] != h1[0] and h3[1] != h2[1]  # divergence chains forward
+    # the root folds in engine identity: same tokens, different engine
+    assert kv_pool.prefix_chain_hashes([1, 2, 3, 4], 4, root="a") \
+        != kv_pool.prefix_chain_hashes([1, 2, 3, 4], 4, root="b")
+    # block geometry changes the chunking, hence the hashes
+    assert kv_pool.prefix_chain_hashes([1, 2, 3, 4], 2) \
+        != kv_pool.prefix_chain_hashes([1, 2, 3, 4], 4)
+
+
+def test_prefix_cache_match_attach_register_lifecycle():
+    a = kv_pool.BlockAllocator(8)
+    c = kv_pool.PrefixCache(a, 4, capacity=8)
+    toks = list(range(12))                   # 3 full blocks
+    hs = c.hashes(toks)
+    assert c.match(hs) == 0
+    # a request prefills blocks 1..3 and registers them
+    ids = a.alloc(3)
+    c.register(hs, ids)
+    assert len(c) == 3 and c.cached_blocks == 3
+    assert all(a.refcount(i) == 2 for i in ids)   # owner + cache
+    a.release(ids)                                # owner retires
+    assert a.live_blocks == 3                     # cache keeps them live
+    assert c.evictable_blocks == 3
+    # a second request matches and attaches the full prefix
+    assert c.match(hs) == 3
+    assert c.match(hs[:2]) == 2
+    assert c.match(hs, limit=1) == 1
+    got = c.attach(hs)
+    assert got == ids and all(a.refcount(i) == 2 for i in ids)
+    assert c.evictable_blocks == 0                # in use -> not evictable
+    assert c.evictable_margin(exclude=hs) == 0
+    a.release(got)
+    # divergent prompt shares only the common prefix
+    hs2 = c.hashes(toks[:4] + [99] * 8)
+    assert c.match(hs2) == 1
+
+
+def test_prefix_cache_lru_eviction_and_flush():
+    a = kv_pool.BlockAllocator(4)
+    c = kv_pool.PrefixCache(a, 2, capacity=2)
+    h1, h2, h3 = (c.hashes(t) for t in ([1, 2], [3, 4], [5, 6]))
+    b1 = a.alloc(1)
+    c.register(h1, b1)
+    a.release(b1)                            # owner retires; cache holds it
+    b2 = a.alloc(1)
+    c.register(h2, b2)
+    a.release(b2)
+    assert a.live_blocks == 2 and c.evictable_blocks == 2
+    a.release(c.attach(h1))                  # LRU-touch h1 -> h2 is LRU
+    b3 = a.alloc(1)
+    c.register(h3, b3)                       # at capacity: evicts h2
+    a.release(b3)
+    assert c.match(h2) == 0 and c.match(h1) == 1 and c.match(h3) == 1
+    assert a.live_blocks == 2
+    # in-use entries are never evicted, even under block pressure
+    pinned = c.attach(h1)
+    assert c.evict_blocks(10) == 1           # only h3's block can go
+    assert c.match(h1) == 1 and c.match(h3) == 0
+    a.release(pinned)
+    assert c.flush() == 1 and len(c) == 0
+    assert a.live_blocks == 0 and a.free_blocks == 4
+
+
+def test_prefix_cache_snapshot_gating():
+    """Recurrent stacks can only resume where a snapshot exists:
+    ``need_snapshot`` shrinks the match to the deepest snapshot-bearing
+    entry, and blockless (pure-recurrent) entries never touch the
+    allocator."""
+    a = kv_pool.BlockAllocator(4)
+    c = kv_pool.PrefixCache(a, 2, capacity=8)
+    hs = c.hashes(list(range(6)))            # 3 full blocks
+    c.register(hs, [None, None, None], snapshots={0: "snap0", 1: "snap1"})
+    assert a.live_blocks == 0                # blockless entries
+    assert c.match(hs) == 3
+    assert c.match(hs, need_snapshot=True) == 2
+    assert c.match(hs, need_snapshot=True, limit=1) == 1
+    assert c.snapshot_at(hs[1]) == "snap1"
+    assert c.attach(hs) == []                # nothing to pin
+    c.flush()
+    assert len(c) == 0
 
 
 # ---------------------------------------------------------------------------

@@ -65,13 +65,35 @@ def test_summary_percentiles_and_window():
     for v in (10.0, 20.0, 30.0, 40.0):
         s.observe(v)
     assert s.percentile(0.0) == 10.0
-    assert s.percentile(0.5) == 30.0           # nearest-rank
+    # exact nearest-rank: rank ceil(0.5 * 4) = 2 -> the 2nd smallest
+    # (the old int-truncation indexing returned the 3rd, 30.0)
+    assert s.percentile(0.5) == 20.0
+    assert s.percentile(0.75) == 30.0          # rank 3, exactly on-grid
     assert s.percentile(0.99) == 40.0
+    assert s.percentile(1.0) == 40.0
     assert s.value == s.percentile(0.5)
     s.observe(1000.0)                          # evicts the oldest (10.0)
     assert s.percentile(0.99) == 1000.0
     assert s.percentile(0.0) == 20.0
     assert s.count == 5                        # lifetime, not window
+
+
+def test_summary_percentile_window_edges():
+    """Nearest-rank at the degenerate edges: a single observation is
+    every percentile of itself (the old indexing could over-run on a
+    window of one), and q pinned to 0/1 hits min/max exactly."""
+    s = Summary("lat", window=8)
+    s.observe(7.0)
+    for q in (0.0, 0.01, 0.5, 0.99, 1.0):
+        assert s.percentile(q) == 7.0
+    s.observe(3.0)                             # window [3, 7]
+    assert s.percentile(0.0) == 3.0            # rank clamps up to 1
+    assert s.percentile(0.5) == 3.0            # rank ceil(1.0) = 1
+    assert s.percentile(0.51) == 7.0           # rank ceil(1.02) = 2
+    assert s.percentile(1.0) == 7.0
+    # empty summary: all-zero rows, no IndexError
+    empty = Summary("e")
+    assert empty.percentile(0.99) == 0.0 and empty.value == 0.0
 
 
 def test_summary_snapshot_expands_sorted_rows():

@@ -26,20 +26,26 @@ FAMILIES = {
 _SCHED_CACHE = {}
 
 
+# the prefix-cache grid additionally covers the jamba-style hybrid
+# stack; kept out of FAMILIES so the base grids stay the same size
+ALL_FAMILIES = dict(FAMILIES, hybrid=dict(attn_period=2))
+
+
 def _sched(family="dense", mode="bf16", num_slots=3, max_len=32,
-           kv_block_size=0, num_kv_blocks=0, chunked_prefill=False):
+           kv_block_size=0, num_kv_blocks=0, chunked_prefill=False,
+           prefix_cache=False):
     """Schedulers are expensive to warm up (prefill compiles per prompt
     length); cache them per configuration across tests."""
     key = (family, mode, num_slots, max_len, kv_block_size, num_kv_blocks,
-           chunked_prefill)
+           chunked_prefill, prefix_cache)
     if key not in _SCHED_CACHE:
-        cfg = small_test_config(**FAMILIES[family],
+        cfg = small_test_config(**ALL_FAMILIES[family],
                                 pum=PUMConfig(mode=mode))
         params = lm.init_params(cfg, jax.random.PRNGKey(0))
         _SCHED_CACHE[key] = ContinuousBatchingScheduler(
             cfg, params, num_slots=num_slots, max_len=max_len,
             kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
-            chunked_prefill=chunked_prefill)
+            chunked_prefill=chunked_prefill, prefix_cache=prefix_cache)
     return _SCHED_CACHE[key]
 
 
@@ -380,6 +386,119 @@ def test_paged_scheduler_oracle_equivalence_property(seed, block_size,
                               max_new=6, mean_interarrival=0.7,
                               eos_rate=0.4, seed=seed)
     _check_trace(sched, reqs)
+
+
+# ---------------------------------------------------------------------------
+# Prefix caching: sharing ON must be bit-identical to sharing OFF and to
+# the solo oracle, and the pool must stay leak-free (every live block is
+# either a slot's private block or a cache-owned shared block)
+# ---------------------------------------------------------------------------
+
+def _assert_prefix_clean(sched):
+    """After a drain, the only live blocks are the prefix cache's."""
+    assert sched._alloc.live_blocks == sched.prefix_cached_blocks
+    stats = sched.prefix_stats()
+    assert stats["cached_blocks"] == sched.prefix_cached_blocks
+
+
+@pytest.mark.parametrize("family", sorted(ALL_FAMILIES))
+@pytest.mark.parametrize("mode", ["bf16", "int8", "pum"])
+def test_prefix_cache_matches_oracle_families_modes(family, mode):
+    """The full family x mode grid with shared-prefix traffic: cached
+    prefixes attach read-only (dense KV) or restore from snapshots
+    (recurrent rows), and every completion still equals its solo run —
+    including a warm re-serve where every prefix hits."""
+    sched = _sched(family, mode, num_slots=2, kv_block_size=4,
+                   chunked_prefill=True, prefix_cache=True)
+    reqs = synthetic_workload(5, sched.cfg.vocab_size, max_prompt=10,
+                              max_new=6, mean_interarrival=1.0,
+                              eos_rate=0.3, shared_prefix_len=8, seed=29)
+    _check_trace(sched, reqs)
+    _check_trace(sched, reqs)          # warm cache: hits, same tokens
+    assert sched.prefix_stats()["hits"] > 0
+    _assert_prefix_clean(sched)
+
+
+def test_prefix_cache_on_equals_off_and_oracle():
+    """Three-way: sharing on == sharing off == solo oracle on the same
+    shared-prefix trace (the off scheduler is the cached plain paged
+    one, so this is a genuine independent run)."""
+    on = _sched(num_slots=2, kv_block_size=4, chunked_prefill=True,
+                prefix_cache=True)
+    off = _sched(num_slots=2, kv_block_size=4, chunked_prefill=True)
+    reqs = synthetic_workload(6, on.cfg.vocab_size, max_prompt=9,
+                              max_new=6, mean_interarrival=0.7,
+                              eos_rate=0.4, shared_prefix_len=6, seed=31)
+    a = _check_trace(on, reqs)         # == oracle
+    b = _check_trace(off, reqs)        # == oracle, sharing disabled
+    for rid in a:
+        assert a[rid].tokens == b[rid].tokens
+    assert on.prefix_stats()["tokens_skipped"] > 0
+    assert all(v == 0 for v in off.prefix_stats().values())  # off: zeros
+    _assert_prefix_clean(on)
+
+
+@pytest.mark.parametrize("block_size", [1, 4, 16])
+def test_prefix_cache_cow_full_prompt_repeats(block_size):
+    """Identical prompts re-served: with the ENTIRE prompt cached the
+    scheduler re-runs only the final position after copy-on-writing the
+    last block into a private copy — across block sizes whose final
+    block is exactly full (the COW-eligible shape)."""
+    sched = _sched(num_slots=2, kv_block_size=block_size,
+                   chunked_prefill=True, prefix_cache=True)
+    plen = 16                          # full blocks at bs 1, 4 and 16
+    prompt = [(i * 7 + 3) % sched.cfg.vocab_size for i in range(plen)]
+    _check_trace(sched, [Request(prompt, max_tokens=5, seed=9, rid=0)])
+    base = sched.prefix_stats()
+    # the repeat (same prompt, different sampling) must COW, not mutate
+    # the shared block the first request registered
+    reqs = [Request(prompt, max_tokens=5, seed=9, rid=0),
+            Request(prompt, max_tokens=4, temperature=0.6, seed=10,
+                    rid=1, arrival=1)]
+    _check_trace(sched, reqs)
+    stats = sched.prefix_stats()
+    assert stats["hits"] > base["hits"]
+    assert stats["tokens_skipped"] >= base["tokens_skipped"] + plen - 1
+    _assert_prefix_clean(sched)
+    sched.flush_prefix_cache()         # leak-freedom: cache owns it all
+    assert sched._alloc.live_blocks == 0
+    assert sched.prefix_cached_blocks == 0
+
+
+def test_prefix_cache_cancellation_mid_decode_leaks_nothing():
+    """Cancelling a request that is decoding against attached shared
+    blocks releases only its references: the survivor sharing the same
+    prefix still matches its oracle and the pool partitions cleanly."""
+    sched = _sched(num_slots=2, kv_block_size=4, chunked_prefill=True,
+                   prefix_cache=True)
+    shared = [3, 1, 4, 1, 5, 9, 2, 6]              # two full blocks
+    r0 = Request(shared + [5], max_tokens=12, seed=41, rid=0)
+    r1 = Request(shared + [8, 9], max_tokens=12, seed=42, rid=1)
+    assert sched.start_request(r0, 0) is None
+    for step in range(4):
+        sched.tick(step)
+    assert sched.start_request(r1, 4) is None      # attaches r0's prefix
+    assert sched.prefix_stats()["hits"] >= 1
+    for step in range(4, 8):
+        sched.tick(step)
+    comp0 = sched.cancel(0, 8, reason="cancelled")
+    want0 = oracle_completion(sched.engine, r0)
+    assert comp0.truncated and comp0.tokens == want0[:len(comp0.tokens)]
+    assert len(comp0.tokens) > 0
+    out = sched.drain(9)                           # r1 still mid-decode
+    want1 = oracle_completion(sched.engine, r1)
+    assert out[1].tokens == want1[:len(out[1].tokens)]
+    assert len(out[1].tokens) > 0
+    _assert_prefix_clean(sched)
+    sched.flush_prefix_cache()
+    assert sched._alloc.live_blocks == 0
+
+
+def test_prefix_cache_requires_paged_pool():
+    cfg = small_test_config()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ContinuousBatchingScheduler(cfg, params, prefix_cache=True)
 
 
 # ---------------------------------------------------------------------------
