@@ -1,8 +1,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist test-serve test-tp test-chaos test-prefix lint \
-	quickstart bench bench-smoke bench-baseline bench-check audit
+.PHONY: test test-dist test-serve test-tp test-chaos test-prefix \
+	test-kernels lint quickstart bench bench-smoke bench-baseline \
+	bench-check audit
 
 # tier-1 verify; test_distributed.py spawns its own subprocesses with
 # XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -57,6 +58,13 @@ test-prefix:
 	$(PY) -m pytest -q tests/test_kv_pool.py
 	$(PY) -m pytest -q tests/test_scheduler.py tests/test_chaos.py \
 		-k "prefix"
+
+# kernel-backend suite (ISSUE 9): the registry's selection semantics,
+# property tests pinning pallas/interpret == the XLA oracle bit for bit
+# for every kernel family (bitslice MVM, fused-scale decode tile, GF(2),
+# paged attention), and the scheduler leg serving under each backend
+test-kernels:
+	$(PY) -m pytest -q tests/test_kernel_backends.py tests/test_kernels.py
 
 quickstart:
 	$(PY) examples/quickstart.py

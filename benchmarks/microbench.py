@@ -472,6 +472,92 @@ def bench_serve_prefix(small: bool = False) -> list[Row]:
     return rows
 
 
+def bench_serve_kernel(small: bool = False) -> list[Row]:
+    """ISSUE 9 decode kernels vs the XLA composition they replace.
+
+    The fused planes-MVM decode tile (recombination + per-row scale in
+    one kernel, int32 accumulator never leaving the tile) runs here on
+    the interpret backend — the kernel dataflow traced through XLA —
+    and already beats the composition on CPU because the composition
+    materialises the [S, M, N] per-plane partials before the
+    shift-and-add.  The paged-attention kernel's wallclock rows are a
+    CPU proxy only: interpret mode emulates the (b,) grid sequentially
+    and copies the aliased pools per program, so the composition wins
+    on CPU; the kernel's win there is the gather it never materialises
+    (the deterministic *_gather_mb row) plus the scatter round-trip the
+    pool aliasing removes — realised when Pallas compiles on TPU.
+    Wallclock + speedup rows sit under CI's IGNORE globs; the traffic
+    row is deterministic and gated.
+    """
+    from repro.core import bitslice
+    from repro.kernels.bitslice_mvm import bitslice_mvm_planes_scaled
+    from repro.kernels.paged_attention import paged_attention
+
+    rng = np.random.default_rng(17)
+    rows: list[Row] = []
+
+    # (a) fused planes MVM at the decode-tile geometry (one VMEM tile:
+    # k, n <= the registry's 128 default block; m = live decode slots)
+    mvm_cases = ([(8, 128, 128, 2)] if small
+                 else [(8, 128, 128, 2), (8, 128, 128, 1),
+                       (32, 128, 128, 1)])
+    for (m, k, n, bps) in mvm_cases:
+        xq = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int32)
+        wq = jnp.asarray(rng.integers(-127, 128, size=(k, n)), jnp.int32)
+        planes = bitslice.slice_planes_signed(wq, 8, bps)
+        scale = jnp.asarray(rng.random(size=(m, 1)), jnp.float32) * 0.01
+
+        def xla(a, p, s, bps=bps):
+            acc = bitslice.bitsliced_matmul_planes(a, p, bps)
+            return acc.astype(jnp.float32) * s
+
+        def ker(a, p, s, bps=bps):
+            return bitslice_mvm_planes_scaled(a, p, s, bits_per_slice=bps,
+                                              backend="interpret")
+
+        fx, fk = jax.jit(xla), jax.jit(ker)
+        assert (np.asarray(fx(xq, planes, scale))
+                == np.asarray(fk(xq, planes, scale))).all()
+        tag = f"mvm_fused_{m}x{k}x{n}_bps{bps}"
+        ux = _time(lambda: fx(xq, planes, scale), iters=3)
+        uk = _time(lambda: fk(xq, planes, scale), iters=3)
+        rows += [(f"serve_kernel/{tag}_xla", ux, "us_per_call"),
+                 (f"serve_kernel/{tag}_kernel", uk, "us_per_call"),
+                 (f"serve_kernel/{tag}_speedup", ux / uk, "x")]
+
+    # (b) paged-attention decode step at serving geometry (disjoint
+    # per-row block ranges; block 0 is the trash block)
+    b, s, w, bs = (2, 1, 4, 8) if small else (4, 1, 16, 8)
+    kvh, g, hd = 2, 2, 64
+    nb = 1 + b * w
+    q = jnp.asarray(rng.normal(size=(b, s, kvh, g, hd)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)), jnp.float32)
+    table = jnp.asarray(np.arange(1, 1 + b * w).reshape(b, w), jnp.int32)
+    ci = jnp.asarray(rng.integers(0, w * bs - s + 1, size=(b,)), jnp.int32)
+    args = (q, kn, vn, kp, vp, table, table, ci)
+
+    def attn(backend):
+        return jax.jit(lambda *a: paged_attention(*a, softcap=0.0,
+                                                  backend=backend))
+
+    fx, fk = attn("xla"), attn("interpret")
+    ox, ok = fx(*args), fk(*args)
+    assert (np.asarray(ox[2]) == np.asarray(ok[2])).all()
+    tag = f"attn_b{b}_kv{w * bs}"
+    rows += [(f"serve_kernel/{tag}_xla",
+              _time(lambda: fx(*args), iters=3), "us_per_call"),
+             (f"serve_kernel/{tag}_kernel",
+              _time(lambda: fk(*args), iters=2, warmup=1), "us_per_call"),
+             # the composition's materialised K+V gather windows per
+             # decode step — traffic the in-kernel table walk never emits
+             (f"serve_kernel/{tag}_gather_mb",
+              2 * b * w * bs * kvh * hd * 4 / 1e6, "MB")]
+    return rows
+
+
 ALL_MICRO = {
     "aes_bulk": bench_aes_bulk,
     "bitslice_mvm": bench_bitslice_mvm,
@@ -482,4 +568,5 @@ ALL_MICRO = {
     "serve_batch": bench_serve_batch,
     "serve_load": bench_serve_load,
     "serve_prefix": bench_serve_prefix,
+    "serve_kernel": bench_serve_kernel,
 }

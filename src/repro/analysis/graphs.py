@@ -94,12 +94,17 @@ def _graph(name: str, kind: str, family: str, mode: str, layout: str,
 def build_cell(family: str, mode: str, layout: str, tp: int, *,
                prepack: bool | None = None, lower: bool = True,
                kinds: Sequence[str] | None = None,
+               kernel_backend: str | None = None,
                ) -> list[ServingGraph]:
     """Build all audited graphs of one grid cell.
 
     ``kinds`` restricts to a subset (the mutation self-tests trace only
     the graph their rule reads).  ``lower=False`` skips MLIR lowering
-    (the donation rule then has nothing to check).
+    (the donation rule then has nothing to check).  ``kernel_backend``
+    pins the kernel registry selection for the traced steps (the
+    kernel-dispatch rule audits pallas/interpret cells; ``None`` = the
+    default XLA composition).  Pallas graphs trace anywhere but only
+    *lower* on TPU, so kernel cells pass ``lower=False`` off-TPU.
     """
     cfg = small_test_config(**FAMILIES[family], pum=PUMConfig(mode=mode))
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
@@ -107,7 +112,7 @@ def build_cell(family: str, mode: str, layout: str, tp: int, *,
     paged = layout == "paged"
     sched = ContinuousBatchingScheduler(
         cfg, params, num_slots=NUM_SLOTS, max_len=MAX_LEN,
-        prepack=prepack, mesh=mesh,
+        prepack=prepack, mesh=mesh, kernel_backend=kernel_backend,
         **(dict(kv_block_size=BLOCK_SIZE, chunked_prefill=True)
            if paged else {}))
     eng = sched.engine
@@ -117,6 +122,7 @@ def build_cell(family: str, mode: str, layout: str, tp: int, *,
         has_kv=kv_pool.has_kv_cache(eng.cfg),
         has_recurrent=kv_pool.has_recurrent_state(eng.cfg),
         prepack=prepack if prepack is not None else mode != "bf16",
+        kernel_backend=kernel_backend,
     )
     tag = f"{family}/{mode}/{layout}/tp{tp}"
     want = set(kinds) if kinds is not None else {
@@ -267,6 +273,21 @@ def build_grid(families: Sequence[str] = tuple(FAMILIES),
             g.name += "/noprepack"
             g.meta["expects_bitplanes"] = True
             graphs.append(g)
+    if 1 in tps and "paged" in layouts:
+        # kernel-backend cells: the same serving steps dispatched through
+        # the Pallas kernels (fused bitslice MVM + paged attention).  The
+        # kernel-dispatch rule proves the pallas_call actually lands in
+        # every MVM scope / the attention scope; the scatter rules skip
+        # (the pool write happens inside the kernel).  lower=False: the
+        # pallas graphs trace anywhere but only lower on TPU.
+        for mode in ("pum", "int8"):
+            if mode not in modes:
+                continue
+            log(f"tracing dense/{mode}/paged/tp1 (kernel backend=pallas)")
+            for g in build_cell("dense", mode, "paged", 1, lower=False,
+                                kernel_backend="pallas"):
+                g.name += "/kernel"
+                graphs.append(g)
     if micro:
         graphs += build_micro_graphs()
     return graphs

@@ -60,6 +60,16 @@ def _float_combine_planes(partials, bits_per_slice):
         return acc.astype(jnp.int32)
 
 
+def _xla_fallback(fn):
+    """Wrap a kernel op so it silently serves the XLA composition: same
+    signature, same (bit-identical) values, no pallas_call — the exact
+    regression the kernel-dispatch rule exists to catch."""
+    def shim(*args, **kwargs):
+        kwargs["backend"] = "xla"
+        return fn(*args, **kwargs)
+    return shim
+
+
 _RETRACE_COUNTER = itertools.count()
 
 
@@ -78,7 +88,9 @@ def _counter_mask_block_table():
 
 def all_mutations() -> list[Mutation]:
     from repro.core import bitslice, pum_linear
-    from repro.models import lm, transformer
+    from repro.kernels.bitslice_mvm import ops as bsops
+    from repro.kernels.paged_attention import ops as paops
+    from repro.models import attention, lm, transformer
     from repro.serve import kv_pool, scheduler
 
     decode_cell = dict(family="dense", mode="int8", layout="paged", tp=1,
@@ -149,6 +161,33 @@ def all_mutations() -> list[Mutation]:
             "single-compilation", decode_cell,
             lambda: [(scheduler, "_mask_block_table",
                       _counter_mask_block_table())]),
+        Mutation(
+            "kernel-mvm-fallback",
+            "the bitslice MVM dispatch silently serves the XLA "
+            "composition under kernel_backend=pallas (same bits, no "
+            "kernel)",
+            "kernel-dispatch",
+            dict(family="dense", mode="pum", layout="paged", tp=1,
+                 kinds=("decode",), lower=False,
+                 kernel_backend="pallas"),
+            lambda: [
+                (pum_linear, "_kernel_planes_scaled",
+                 _xla_fallback(bsops.bitslice_mvm_planes_scaled)),
+                (pum_linear, "_kernel_planes",
+                 _xla_fallback(bsops.bitslice_mvm_planes)),
+                (pum_linear, "_kernel_mvm",
+                 _xla_fallback(bsops.bitslice_mvm)),
+            ]),
+        Mutation(
+            "kernel-attn-fallback",
+            "paged attention silently serves the scatter+gather "
+            "composition under kernel_backend=pallas",
+            "kernel-dispatch",
+            dict(family="dense", mode="pum", layout="paged", tp=1,
+                 kinds=("decode",), lower=False,
+                 kernel_backend="pallas"),
+            lambda: [(attention, "_paged_attention",
+                      _xla_fallback(paops.paged_attention))]),
         Mutation(
             "drop-accum-constraint",
             "row-sharded accumulators never close with a psum "

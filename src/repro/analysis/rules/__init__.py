@@ -6,6 +6,7 @@ from repro.analysis.rules.accumulators import IntegerAccumulators
 from repro.analysis.rules.barriers import BarrierCoverage
 from repro.analysis.rules.compilation import SingleCompilation
 from repro.analysis.rules.donation import Donation
+from repro.analysis.rules.kernel_dispatch import KernelDispatch
 from repro.analysis.rules.pum_path import PumPath
 from repro.analysis.rules.scatter import MaskedScatter
 from repro.analysis.rules.shared import SharedReadOnly
@@ -18,8 +19,9 @@ ALL_RULES = [
     Donation(),
     SingleCompilation(),
     PumPath(),
+    KernelDispatch(),
 ]
 
 __all__ = ["ALL_RULES", "BarrierCoverage", "MaskedScatter",
            "SharedReadOnly", "IntegerAccumulators", "Donation",
-           "SingleCompilation", "PumPath"]
+           "SingleCompilation", "PumPath", "KernelDispatch"]

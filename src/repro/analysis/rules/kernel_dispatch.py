@@ -1,0 +1,65 @@
+"""kernel-dispatch: a kernel-backend serving step actually runs the
+kernels.
+
+Pins ISSUE 9's bug class: the registry makes the backend an *ambient*
+selection, so one refactor of a dispatch gate (a ``tp_serving()`` check,
+an ``s <= _KERNEL_MAX_S`` bound, a backend comparison) can silently send
+the hot path back to the XLA composition — bit-identical outputs, no
+test failure, and the entire point of the kernels (no materialised
+gather, no HBM round-trip for the accumulator) quietly gone.
+
+For every graph traced under ``kernel_backend`` pallas/interpret:
+
+  * quantised modes: every ``pum_linear<N>`` MVM scope instance must
+    contain a ``pallas_call`` (the bitslice kernel — fused-scale or
+    plain — actually dispatched);
+  * paged attention: at least one ``pallas_call`` sits inside the
+    ``paged_attn_kernel`` scope (the in-kernel block-table walk replaced
+    the scatter + gather composition).
+
+The walker records ``pallas_call`` as an opaque leaf with its absolute
+scope stack, which is exactly what this rule needs.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.analysis.report import Violation
+
+_MVM_SCOPE = re.compile(r"pum_linear\d+")
+
+
+class KernelDispatch:
+    name = "kernel-dispatch"
+
+    def check(self, g, idx) -> list[Violation]:
+        if g.meta.get("kernel_backend") not in ("pallas", "interpret"):
+            return []
+        if g.kind not in ("decode", "chunk_prefill"):
+            return []
+        v: list[Violation] = []
+
+        def fail(msg):
+            v.append(Violation(self.name, g.name, msg))
+
+        if g.mode in ("int8", "pum"):
+            instances = idx.scope_instances(r"pum_linear\d+")
+            if not instances:
+                fail("no pum_linear MVM scopes in a quantised decode "
+                     "step — scope planting broke")
+            for inst, recs in sorted(instances.items()):
+                if not any(r.prim == "pallas_call" for r in recs):
+                    fail(f"MVM scope {inst}: no pallas_call — the "
+                         f"contraction fell back to the XLA composition "
+                         f"despite kernel_backend="
+                         f"{g.meta['kernel_backend']}")
+
+        if g.layout == "paged" and g.meta.get("has_kv"):
+            attn = [r for r in idx.records if r.prim == "pallas_call"
+                    and "paged_attn_kernel" in r.stack]
+            if not attn:
+                fail("no pallas_call inside a paged_attn_kernel scope — "
+                     "paged attention fell back to the scatter+gather "
+                     "composition despite kernel_backend="
+                     f"{g.meta['kernel_backend']}")
+        return v

@@ -35,6 +35,13 @@ class SharedReadOnly:
             return []
         if g.layout != "paged" or not g.meta.get("has_kv"):
             return []
+        if g.meta.get("kernel_backend") not in (None, "xla"):
+            # kernel-backend cells: the write-table trash-routing is an
+            # address computation inside the pallas_call (the kernel
+            # stores through the write table, shared columns routed to
+            # trash) — no jaxpr-level scatter to audit; see the
+            # kernel-dispatch rule and tests/test_kernel_backends.py
+            return []
         v: list[Violation] = []
 
         def fail(msg):

@@ -46,12 +46,34 @@ import jax.numpy as jnp
 from repro.config import PUMConfig
 from repro.core import analog, bitslice
 from repro.core.prepack import PackedLinear
-from repro.dist.sharding import tp_replicate
+from repro.dist.sharding import tp_replicate, tp_serving
+from repro.kernels import registry as _kreg
+from repro.kernels.bitslice_mvm import ops as _bsops
+from repro.kernels.registry import KernelBackend
 
 # Module-level alias so the graph auditor's mutation self-tests can
 # knock out *this file's* rounding pins (and only these) to prove the
 # barrier-coverage rule fires (analysis/mutations.py).
 _barrier = jax.lax.optimization_barrier
+
+# Module-level kernel aliases: the kernel-dispatch mutation self-test
+# knocks these out with XLA shims to prove the auditor notices a decode
+# step silently falling back off the Pallas path (analysis/mutations.py).
+_kernel_mvm = _bsops.bitslice_mvm
+_kernel_planes = _bsops.bitslice_mvm_planes
+_kernel_planes_scaled = _bsops.bitslice_mvm_planes_scaled
+
+
+def _mvm_backend(cfg: PUMConfig) -> KernelBackend:
+    """Backend for the bit-sliced MVM contractions.
+
+    An ambient :func:`repro.kernels.registry.use_backend` selection wins;
+    otherwise ``cfg.use_kernel`` keeps its pre-registry meaning (kernel
+    in the platform-native flavour, or the XLA composition)."""
+    b = _kreg.get_backend("bitslice_mvm")
+    if b is not None:
+        return b
+    return _kreg.native_backend() if cfg.use_kernel else KernelBackend.XLA
 
 # Trace-order counter giving every pum_linear call site a unique
 # ``named_scope`` instance (``pum_linear<N>``): the auditor counts and
@@ -148,10 +170,17 @@ def _matmul_int8(x, w):
     """Dynamic activation quant + weight quant, int32 accumulation."""
     xq, xs = _quantize_act(x, 8)
     wq, ws = bitslice.quantize_symmetric(w.astype(jnp.float32), 8, axis=0)
-    acc = jax.lax.dot_general(
-        xq.astype(jnp.int8), wq.astype(jnp.int8),
-        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
+    b = _kreg.get_backend("bitslice_mvm")
+    if b not in (None, KernelBackend.XLA):
+        # int8 is the single-plane special case: the whole quantised
+        # weight is one plane, recombination degenerates to the plain dot
+        acc = _kernel_planes(xq, wq.astype(jnp.int8)[None],
+                             bits_per_slice=8, backend=b)
+    else:
+        acc = jax.lax.dot_general(
+            xq.astype(jnp.int8), wq.astype(jnp.int8),
+            dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
     acc = _close_accumulator(acc)      # inter-tile psum: int32 partials
     y = acc.astype(jnp.float32) * (xs * ws)
     return y.astype(x.dtype)
@@ -170,10 +199,9 @@ def _matmul_pum(x, w, cfg: PUMConfig, key: jax.Array | None):
             weight_bits=cfg.weight_bits, bits_per_slice=cfg.bits_per_slice,
             input_bits=cfg.input_bits, adc=cfg.adc, noise=cfg.noise, key=key)
         acc = acc.reshape(lead + (w.shape[-1],))
-    elif cfg.use_kernel:
-        from repro.kernels.bitslice_mvm import ops as bsops
-        acc = bsops.bitslice_mvm(xq, wq, weight_bits=cfg.weight_bits,
-                                 bits_per_slice=cfg.bits_per_slice)
+    elif (b := _mvm_backend(cfg)) != KernelBackend.XLA:
+        acc = _kernel_mvm(xq, wq, weight_bits=cfg.weight_bits,
+                          bits_per_slice=cfg.bits_per_slice, backend=b)
     else:
         acc = bitslice.bitsliced_matmul_exact(
             xq, wq, cfg.weight_bits, cfg.bits_per_slice)
@@ -189,7 +217,13 @@ def _matmul_pum(x, w, cfg: PUMConfig, key: jax.Array | None):
 
 def _matmul_int8_packed(x, w: PackedLinear):
     xq, xs = _quantize_act(x, 8)
-    acc = bitslice.int_matmul(xq, w.wq)
+    b = _kreg.get_backend("bitslice_mvm")
+    if b not in (None, KernelBackend.XLA):
+        # single-plane kernel MVM; the per-out-channel scale ([1, N])
+        # cannot ride the fused per-row epilogue, so it stays outside
+        acc = _kernel_planes(xq, w.wq[None], bits_per_slice=8, backend=b)
+    else:
+        acc = bitslice.int_matmul(xq, w.wq)
     acc = _close_accumulator(acc)
     y = acc.astype(jnp.float32) * (xs * w.scale)
     return y.astype(x.dtype)
@@ -207,10 +241,21 @@ def _matmul_pum_packed(x, w: PackedLinear, cfg: PUMConfig,
             weight_bits=w.weight_bits, bits_per_slice=w.bits_per_slice,
             input_bits=cfg.input_bits, adc=cfg.adc, noise=cfg.noise, key=key)
         acc = acc.reshape(lead + (w.shape[-1],))
-    elif cfg.use_kernel:
-        from repro.kernels.bitslice_mvm import ops as bsops
-        acc = bsops.bitslice_mvm_planes(xq, w.planes,
-                                        bits_per_slice=w.bits_per_slice)
+    elif (b := _mvm_backend(cfg)) != KernelBackend.XLA:
+        if not tp_serving():
+            # the fused decode tile: plane recombination + per-row
+            # dequant scale in one kernel epilogue.  pum scale is
+            # per-tensor ([1, 1]), so ``xs * w.scale`` is a pure per-row
+            # scale and the fusion is bit-identical to scaling outside
+            # (same int32 -> f32 convert, same f32 product).  Under TP
+            # the accumulator must cross the psum *before* scaling, so
+            # the fused epilogue only runs single-device.
+            y = _kernel_planes_scaled(xq, w.planes, xs * w.scale,
+                                      bits_per_slice=w.bits_per_slice,
+                                      backend=b)
+            return y.astype(x.dtype)
+        acc = _kernel_planes(xq, w.planes, bits_per_slice=w.bits_per_slice,
+                             backend=b)
     else:
         # the decomposition is lossless, so the exact serving contraction
         # runs against the recombined int8 weight in one MXU-friendly dot

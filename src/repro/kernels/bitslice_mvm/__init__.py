@@ -1,6 +1,9 @@
-from repro.kernels.bitslice_mvm.ops import bitslice_mvm, bitslice_mvm_planes
+from repro.kernels.bitslice_mvm.ops import (bitslice_mvm,
+                                            bitslice_mvm_planes,
+                                            bitslice_mvm_planes_scaled)
 from repro.kernels.bitslice_mvm.ref import (bitslice_mvm_from_weights_ref,
                                             bitslice_mvm_ref)
 
-__all__ = ["bitslice_mvm", "bitslice_mvm_planes", "bitslice_mvm_ref",
+__all__ = ["bitslice_mvm", "bitslice_mvm_planes",
+           "bitslice_mvm_planes_scaled", "bitslice_mvm_ref",
            "bitslice_mvm_from_weights_ref"]

@@ -61,6 +61,40 @@ def _bitslice_mvm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_slices: int,
         o_ref[...] = acc_ref[...]
 
 
+def _bitslice_mvm_scaled_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                                n_slices: int, bits_per_slice: int,
+                                k_steps: int):
+    """The fused decode tile: the same shift-and-add contraction, with
+    the per-row dequant scale applied in the epilogue.
+
+    s_ref: [bm, 1] f32 — one scale per activation row (``xs * w.scale``).
+    o_ref: [bm, bn] f32 — ``acc.astype(f32) * s`` written at the last k
+    step; the int32 accumulator never leaves VMEM (the paper's
+    recombine-during-transfer argument extended one stage further: the
+    DCE's dequant multiply also happens before the result ever
+    round-trips to HBM).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    acc = acc_ref[...]
+    for s in range(n_slices):
+        part = jax.lax.dot_general(
+            x, w_ref[s],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc = acc + (part << (s * bits_per_slice))
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        # dequant epilogue: the same int32->f32 convert + f32 multiply
+        # the unfused path performs, so the fused result is bit-identical
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * s_ref[...]
+
+
 def bitslice_mvm_pallas(x: jax.Array, w_planes: jax.Array, *,
                         bits_per_slice: int,
                         block_m: int = 128, block_n: int = 128,
@@ -100,3 +134,43 @@ def bitslice_mvm_pallas(x: jax.Array, w_planes: jax.Array, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_planes)
+
+
+def bitslice_mvm_scaled_pallas(x: jax.Array, w_planes: jax.Array,
+                               row_scale: jax.Array, *,
+                               bits_per_slice: int,
+                               block_m: int = 128, block_n: int = 128,
+                               block_k: int = 128,
+                               interpret: bool = True) -> jax.Array:
+    """x: [M, K] int8; w_planes: [S, K, N] int8; row_scale: [M, 1] f32
+    -> [M, N] f32 == (recombined int MVM).astype(f32) * row_scale.
+
+    Same tiling contract as :func:`bitslice_mvm_pallas` (ops.py pads).
+    """
+    s, k, n = w_planes.shape
+    m = x.shape[0]
+    assert x.shape[1] == k
+    assert row_scale.shape == (m, 1), row_scale.shape
+    assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0, (
+        (m, k, n, block_m, block_k, block_n))
+    k_steps = k // block_k
+    grid = (m // block_m, n // block_n, k_steps)
+
+    kernel = functools.partial(_bitslice_mvm_scaled_kernel, n_slices=s,
+                               bits_per_slice=bits_per_slice,
+                               k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((s, block_k, block_n), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w_planes, row_scale)

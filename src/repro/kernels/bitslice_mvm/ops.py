@@ -1,10 +1,21 @@
-"""Jitted public wrappers for the bitslice_mvm Pallas kernel.
+"""Public wrappers for the bitslice_mvm kernel family.
 
 Handles: leading batch dims, padding to MXU-aligned tiles, plane
 decomposition from signed quantised weights (or pre-sliced planes via
-:func:`bitslice_mvm_planes` — the prepacked serving path), the adaptive M
-block for small-row decode MVMs, and the interpret-mode switch (CPU
-validation vs. TPU execution).
+:func:`bitslice_mvm_planes` — the prepacked serving path), the fused
+scale epilogue (:func:`bitslice_mvm_planes_scaled` — the decode tile),
+and backend dispatch through :mod:`repro.kernels.registry`:
+
+  xla       — the pure-jnp oracle (``ref.py``),
+  pallas    — the compiled TPU kernel,
+  interpret — the kernel body through the Pallas interpreter.
+
+The wrappers are plain Python: backend and tile resolution happen
+eagerly at call/trace time (so the ambient ``use_backend`` selection is
+honoured inside outer jits), then dispatch to an inner jitted impl with
+the backend baked in as a static argument.  The pre-registry per-call
+``interpret=`` / ``block_m=`` kwargs keep working for one release with
+a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
@@ -14,79 +25,148 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitslice
-from repro.kernels.bitslice_mvm.kernel import bitslice_mvm_pallas
+from repro.kernels import registry
+from repro.kernels.bitslice_mvm.kernel import (bitslice_mvm_pallas,
+                                               bitslice_mvm_scaled_pallas)
+from repro.kernels.bitslice_mvm.ref import bitslice_mvm_ref
+from repro.kernels.registry import KernelBackend
 
-_INTERPRET = jax.default_backend() != "tpu"
-
-
-def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+# deprecated compat aliases: tile policy now lives in the registry
+_pad_to = registry.pad_to
 
 
 def _choose_block_m(m: int, block_m: int, interpret: bool) -> int:
-    """Adaptive M block: decode MVMs (M=1) must not pad rows to 128.
+    """Deprecated shim — use :func:`repro.kernels.registry.choose_block_m`.
 
-    Returns the smallest power-of-two block covering ``m``, floored at the
-    hardware-minimum sublane tile (8 rows in interpret mode, 32 for int8
-    tiles on a real TPU), capped at ``block_m``.
+    Kept one release for external callers of the old private helper;
+    the explicit-``block_m`` sublane check applies (sub-floor tiles now
+    raise ``KernelTileError`` instead of silently misconfiguring the
+    hardware tile).
     """
-    if m >= block_m:
-        return block_m
-    floor = 8 if interpret else 32
-    return min(block_m, max(floor, 1 << (max(m, 1) - 1).bit_length()))
+    backend = (KernelBackend.INTERPRET if interpret
+               else KernelBackend.PALLAS)
+    return registry.choose_block_m(m, block_m, backend)
+
+
+def _resolve(backend, interpret, block_m, block_n, block_k):
+    """Shared wrapper-entry resolution: backend + tile sizes."""
+    backend = registry.resolve_backend(backend, kernel="bitslice_mvm",
+                                       interpret=interpret)
+    if (block_m, block_n, block_k) != (None, None, None):
+        registry.warn_deprecated_blocks(stacklevel=4)
+    return (backend, block_m,
+            block_n if block_n is not None else registry.DEFAULT_BLOCK,
+            block_k if block_k is not None else registry.DEFAULT_BLOCK)
 
 
 def _run(x2: jax.Array, planes: jax.Array, *, bits_per_slice: int,
-         block_m: int, block_n: int, block_k: int,
-         interpret: bool) -> jax.Array:
-    """Shared padding + kernel dispatch. x2: [M, K] int8; planes: [S, K, N]."""
+         block_m: int | None, block_n: int, block_k: int,
+         backend: KernelBackend,
+         row_scale: jax.Array | None = None) -> jax.Array:
+    """Shared padding + kernel dispatch. x2: [M, K] int8; planes:
+    [S, K, N]; row_scale: [M, 1] f32 for the fused scale epilogue."""
     m = x2.shape[0]
     n = planes.shape[2]
-    bm = _choose_block_m(m, block_m, interpret)
+    bm = registry.choose_block_m(m, block_m, backend)
+    interpret = backend == KernelBackend.INTERPRET
     x2 = _pad_to(_pad_to(x2, 0, bm), 1, block_k)
     planes = _pad_to(_pad_to(planes, 1, block_k), 2, block_n)
-    out = bitslice_mvm_pallas(x2, planes, bits_per_slice=bits_per_slice,
-                              block_m=bm, block_n=block_n,
-                              block_k=block_k, interpret=interpret)
+    if row_scale is None:
+        out = bitslice_mvm_pallas(x2, planes,
+                                  bits_per_slice=bits_per_slice,
+                                  block_m=bm, block_n=block_n,
+                                  block_k=block_k, interpret=interpret)
+    else:
+        out = bitslice_mvm_scaled_pallas(
+            x2, planes, _pad_to(row_scale, 0, bm),
+            bits_per_slice=bits_per_slice, block_m=bm, block_n=block_n,
+            block_k=block_k, interpret=interpret)
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("weight_bits", "bits_per_slice",
-                                             "block_m", "block_n", "block_k",
-                                             "interpret"))
-def bitslice_mvm(x_q: jax.Array, w_q: jax.Array, *, weight_bits: int = 8,
-                 bits_per_slice: int = 2, block_m: int = 128,
-                 block_n: int = 128, block_k: int = 128,
-                 interpret: bool | None = None) -> jax.Array:
-    """y = x_q @ w_q via the bit-sliced kernel (slices planes per call).
-
-    x_q: [..., K] int (int8-range); w_q: [K, N] int signed (weight_bits).
-    Returns [..., N] int32.
-    """
-    if interpret is None:
-        interpret = _INTERPRET
+@functools.partial(jax.jit, static_argnames=(
+    "weight_bits", "bits_per_slice", "block_m", "block_n", "block_k",
+    "backend"))
+def _bitslice_mvm_impl(x_q, w_q, *, weight_bits, bits_per_slice, block_m,
+                       block_n, block_k, backend):
     lead = x_q.shape[:-1]
     k, n = w_q.shape
+    if backend == KernelBackend.XLA:
+        return bitslice.bitsliced_matmul_exact(
+            x_q, w_q, weight_bits, bits_per_slice)
     x2 = x_q.reshape(-1, k).astype(jnp.int8)
     planes = bitslice.slice_planes_signed(w_q, weight_bits,
                                           bits_per_slice).astype(jnp.int8)
     out = _run(x2, planes, bits_per_slice=bits_per_slice, block_m=block_m,
-               block_n=block_n, block_k=block_k, interpret=interpret)
+               block_n=block_n, block_k=block_k, backend=backend)
     return out.reshape(lead + (n,))
 
 
-@functools.partial(jax.jit, static_argnames=("bits_per_slice", "block_m",
-                                             "block_n", "block_k",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "bits_per_slice", "block_m", "block_n", "block_k", "backend"))
+def _bitslice_mvm_planes_impl(x_q, planes, *, bits_per_slice, block_m,
+                              block_n, block_k, backend):
+    lead = x_q.shape[:-1]
+    k = planes.shape[1]
+    n = planes.shape[2]
+    if backend == KernelBackend.XLA:
+        x2 = x_q.reshape(-1, k)
+        out = bitslice_mvm_ref(x2, planes, bits_per_slice=bits_per_slice)
+    else:
+        x2 = x_q.reshape(-1, k).astype(jnp.int8)
+        out = _run(x2, planes.astype(jnp.int8),
+                   bits_per_slice=bits_per_slice, block_m=block_m,
+                   block_n=block_n, block_k=block_k, backend=backend)
+    return out.reshape(lead + (n,))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits_per_slice", "block_m", "block_n", "block_k", "backend"))
+def _bitslice_mvm_planes_scaled_impl(x_q, planes, row_scale, *,
+                                     bits_per_slice, block_m, block_n,
+                                     block_k, backend):
+    lead = x_q.shape[:-1]
+    k = planes.shape[1]
+    n = planes.shape[2]
+    scale2 = row_scale.reshape(-1, 1).astype(jnp.float32)
+    if backend == KernelBackend.XLA:
+        x2 = x_q.reshape(-1, k)
+        acc = bitslice_mvm_ref(x2, planes, bits_per_slice=bits_per_slice)
+        out = acc.astype(jnp.float32) * scale2
+    else:
+        x2 = x_q.reshape(-1, k).astype(jnp.int8)
+        out = _run(x2, planes.astype(jnp.int8),
+                   bits_per_slice=bits_per_slice, block_m=block_m,
+                   block_n=block_n, block_k=block_k, backend=backend,
+                   row_scale=scale2)
+    return out.reshape(lead + (n,))
+
+
+def bitslice_mvm(x_q: jax.Array, w_q: jax.Array, *, weight_bits: int = 8,
+                 bits_per_slice: int = 2,
+                 backend: KernelBackend | str | None = None,
+                 block_m: int | None = None, block_n: int | None = None,
+                 block_k: int | None = None,
+                 interpret: bool | None = None) -> jax.Array:
+    """y = x_q @ w_q via the bit-sliced kernel (slices planes per call).
+
+    x_q: [..., K] int (int8-range); w_q: [K, N] int signed (weight_bits).
+    Returns [..., N] int32.  ``backend`` (or the ambient
+    ``registry.use_backend`` selection) picks xla/pallas/interpret.
+    """
+    backend, bm, bn, bk = _resolve(backend, interpret, block_m, block_n,
+                                   block_k)
+    return _bitslice_mvm_impl(x_q, w_q, weight_bits=weight_bits,
+                              bits_per_slice=bits_per_slice, block_m=bm,
+                              block_n=bn, block_k=bk, backend=backend)
+
+
 def bitslice_mvm_planes(x_q: jax.Array, planes: jax.Array, *,
-                        bits_per_slice: int = 2, block_m: int = 128,
-                        block_n: int = 128, block_k: int = 128,
+                        bits_per_slice: int = 2,
+                        backend: KernelBackend | str | None = None,
+                        block_m: int | None = None,
+                        block_n: int | None = None,
+                        block_k: int | None = None,
                         interpret: bool | None = None) -> jax.Array:
     """y over pre-sliced planes — the prepacked serving path.
 
@@ -94,13 +174,33 @@ def bitslice_mvm_planes(x_q: jax.Array, planes: jax.Array, *,
     planes (``PackedLinear.planes`` layout).  Skips the per-call
     ``slice_planes_signed`` pass entirely.  Returns [..., N] int32.
     """
-    if interpret is None:
-        interpret = _INTERPRET
-    lead = x_q.shape[:-1]
-    k = planes.shape[1]
-    n = planes.shape[2]
-    x2 = x_q.reshape(-1, k).astype(jnp.int8)
-    out = _run(x2, planes.astype(jnp.int8), bits_per_slice=bits_per_slice,
-               block_m=block_m, block_n=block_n, block_k=block_k,
-               interpret=interpret)
-    return out.reshape(lead + (n,))
+    backend, bm, bn, bk = _resolve(backend, interpret, block_m, block_n,
+                                   block_k)
+    return _bitslice_mvm_planes_impl(x_q, planes,
+                                     bits_per_slice=bits_per_slice,
+                                     block_m=bm, block_n=bn, block_k=bk,
+                                     backend=backend)
+
+
+def bitslice_mvm_planes_scaled(x_q: jax.Array, planes: jax.Array,
+                               row_scale: jax.Array, *,
+                               bits_per_slice: int = 2,
+                               backend: KernelBackend | str | None = None,
+                               block_m: int | None = None,
+                               block_n: int | None = None,
+                               block_k: int | None = None,
+                               interpret: bool | None = None) -> jax.Array:
+    """The fused decode tile: plane recombination + per-row scale in one
+    kernel.
+
+    x_q: [..., K] int (int8-range); planes: [S, K, N] int8;
+    row_scale: [..., 1] f32 (one dequant scale per input row — the
+    ``xs * w.scale`` product of the serving fast path).  Returns
+    [..., N] f32 == ``(x_q @ w).astype(f32) * row_scale`` with the int32
+    accumulator never leaving VMEM.
+    """
+    backend, bm, bn, bk = _resolve(backend, interpret, block_m, block_n,
+                                   block_k)
+    return _bitslice_mvm_planes_scaled_impl(
+        x_q, planes, row_scale, bits_per_slice=bits_per_slice,
+        block_m=bm, block_n=bn, block_k=bk, backend=backend)

@@ -1,4 +1,12 @@
-"""Jitted public wrapper for the gf2_mvm Pallas kernel."""
+"""Public wrapper for the gf2_mvm kernel, dispatched through
+:mod:`repro.kernels.registry` (xla oracle / pallas / interpret).
+
+The wrapper is plain Python — backend and tile resolution happen
+eagerly, honouring the ambient ``use_backend`` selection — and calls an
+inner jitted impl with the backend static.  The pre-registry
+``interpret=`` / ``block_m=`` kwargs keep working one release with a
+``DeprecationWarning``.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,37 +14,52 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.gf2_mvm.kernel import gf2_mvm_pallas
+from repro.kernels.gf2_mvm.ref import gf2_mvm_ref
+from repro.kernels.registry import KernelBackend
 
-_INTERPRET = jax.default_backend() != "tpu"
-
-
-def _pad_to(x, axis, mult):
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+_pad_to = registry.pad_to   # deprecated compat alias
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
-                                             "interpret"))
-def gf2_mvm(x: jax.Array, a: jax.Array, *, block_m: int = 128,
-            block_n: int = 128, block_k: int = 128,
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "block_k", "backend"))
+def _gf2_mvm_impl(x, a, *, block_m, block_n, block_k, backend):
+    lead = x.shape[:-1]
+    k, n = a.shape
+    x2 = x.reshape(-1, k)
+    if backend == KernelBackend.XLA:
+        return gf2_mvm_ref(x2, a).reshape(lead + (n,))
+    x2 = x2.astype(jnp.int8)
+    m = x2.shape[0]
+    # the adaptive decode M block the bitslice family already had —
+    # deduplicated into the registry tiling helper
+    bm = registry.choose_block_m(m, block_m, backend)
+    x2 = _pad_to(_pad_to(x2, 0, bm), 1, block_k)
+    a2 = _pad_to(_pad_to(a.astype(jnp.int8), 0, block_k), 1, block_n)
+    out = gf2_mvm_pallas(x2, a2, block_m=bm, block_n=block_n,
+                         block_k=block_k,
+                         interpret=backend == KernelBackend.INTERPRET)
+    return out[:m, :n].reshape(lead + (n,))
+
+
+def gf2_mvm(x: jax.Array, a: jax.Array, *,
+            backend: KernelBackend | str | None = None,
+            block_m: int | None = None, block_n: int | None = None,
+            block_k: int | None = None,
             interpret: bool | None = None) -> jax.Array:
     """Parity matmul y = (x @ a) & 1 for binary matrices.
 
     x: [..., K] {0,1}; a: [K, N] {0,1}. Returns [..., N] int8 {0,1}.
+    ``backend`` (or the ambient ``registry.use_backend`` selection)
+    picks xla/pallas/interpret.
     """
-    if interpret is None:
-        interpret = _INTERPRET
-    lead = x.shape[:-1]
-    k, n = a.shape
-    x2 = x.reshape(-1, k).astype(jnp.int8)
-    m = x2.shape[0]
-    x2 = _pad_to(_pad_to(x2, 0, block_m), 1, block_k)
-    a2 = _pad_to(_pad_to(a.astype(jnp.int8), 0, block_k), 1, block_n)
-    out = gf2_mvm_pallas(x2, a2, block_m=block_m, block_n=block_n,
-                         block_k=block_k, interpret=interpret)
-    return out[:m, :n].reshape(lead + (n,))
+    backend = registry.resolve_backend(backend, kernel="gf2_mvm",
+                                       interpret=interpret)
+    if (block_m, block_n, block_k) != (None, None, None):
+        registry.warn_deprecated_blocks()
+    return _gf2_mvm_impl(
+        x, a, block_m=block_m,
+        block_n=block_n if block_n is not None else registry.DEFAULT_BLOCK,
+        block_k=block_k if block_k is not None else registry.DEFAULT_BLOCK,
+        backend=backend)

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: paged-attention decode over the shared block pool.
+
+One grid program per batch row, walking the row's block table entirely
+in-kernel — the DARTH-PUM argument applied to the serving memory system:
+instead of materialising a gathered ``[B, T, KV, hd]`` KV view in HBM
+every step (the XLA composition's gather) and scattering the new token
+through a separate indexed update, the kernel
+
+  * translates the row's ``cache_index`` to (block, offset) coordinates
+    and stores this step's K/V through the *write* table (whose
+    prefix-cache-shared columns are trash-routed — the read-only
+    masking happens at the kernel's store address computation, never as
+    a separate pool pass);
+  * gathers the row's logical KV view block-by-block through the *read*
+    table (trash blocks — id 0 — are gathered like any other and their
+    garbage eliminated by the causal position mask, exactly as in the
+    oracle);
+  * runs the plain-softmax attention for the row, mirroring
+    ``models.attention._plain_attention`` op for op so the result is
+    bit-identical to the XLA composition.
+
+The pools enter as ``input_output_aliases``'d outputs: the kernel
+read-modify-writes them in place (reads after the row's own stores see
+the new entries — the decode token attends itself).  The grid axis is
+``arbitrary`` (sequential): rows' stores target disjoint physical
+blocks except the trash block, whose content is never attended.
+
+Guarantee boundary: bit-identity with the oracle holds for every
+scheduler-reachable state — an *active* row's causally-visible
+positions always map to allocated (non-trash) blocks in both tables, so
+its output depends only on real blocks plus its own stores.  Rows whose
+visible range is trash-backed (inactive slots, whose outputs the
+scheduler discards) may read different garbage than the oracle: the
+kernel's row ``b`` gathers before rows ``> b`` store, while the oracle
+gathers after *all* stores, so colliding trash-offset writes are
+observed at different times.  Trash content is not part of the
+contract.
+
+Sizing: the whole pool is kept resident per program, which is the small
+serving-pool regime this repo targets; a production-size pool wants
+``memory_space=ANY`` + explicit DMA per table entry, which changes only
+this file.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _paged_attention_kernel(idx_ref, table_ref, wtable_ref, q_ref, kn_ref,
+                            vn_ref, kp_in_ref, vp_in_ref, kp_ref, vp_ref,
+                            o_ref, *, s_len: int, bs: int, w: int, t: int,
+                            softcap: float):
+    """One batch row.  kp_ref/vp_ref alias the input pools (kp_in_ref /
+    vp_in_ref are the pre-aliasing handles, unused: all reads go through
+    the aliased refs so a row sees its own stores)."""
+    del kp_in_ref, vp_in_ref
+    b = pl.program_id(0)
+    base = idx_ref[b]
+    full = (slice(None), slice(None))
+
+    # -- write: per-token cache_index -> (block, offset) through the
+    # write table (shared_cols read-only masking = its trash-routed
+    # columns), the kernel-side kv_pool_write
+    for si in range(s_len):
+        pos = base + si
+        col = jnp.clip(pos // bs, 0, w - 1)
+        phys = wtable_ref[b, col]
+        off = pos % bs
+        pl.store(kp_ref, (pl.ds(phys, 1), pl.ds(off, 1)) + full,
+                 kn_ref[0, si][None, None].astype(kp_ref.dtype))
+        pl.store(vp_ref, (pl.ds(phys, 1), pl.ds(off, 1)) + full,
+                 vn_ref[0, si][None, None].astype(vp_ref.dtype))
+
+    # -- gather: walk the read table; reads see this row's stores above
+    k_parts = []
+    v_parts = []
+    for col in range(w):
+        blk = table_ref[b, col]
+        k_parts.append(pl.load(kp_ref, (pl.ds(blk, 1), slice(None)) + full))
+        v_parts.append(pl.load(vp_ref, (pl.ds(blk, 1), slice(None)) + full))
+    kvh, hd = kp_ref.shape[2:]
+    k_all = jnp.concatenate(k_parts, axis=0).reshape(w * bs, kvh, hd)[:t]
+    v_all = jnp.concatenate(v_parts, axis=0).reshape(w * bs, kvh, hd)[:t]
+
+    # -- attention, mirroring _plain_attention op for op (bit-exactness)
+    q_row = q_ref[0]                                    # [S, KV, G, hd]
+    scale = 1.0 / np.sqrt(q_row.shape[-1])
+    scores = jnp.einsum("skgd,tkd->ksgt", q_row, k_all,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = base + jax.lax.broadcasted_iota(jnp.int32, (s_len, t), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (s_len, t), 1)
+    mask = kpos <= qpos                                 # [S, T] causal at
+    scores = jnp.where(mask[None, :, None, :], scores, NEG_INF)
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m))
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("ksgt,tkd->skgd", probs.astype(v_all.dtype), v_all)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                           k_pool: jax.Array, v_pool: jax.Array,
+                           block_table: jax.Array, write_table: jax.Array,
+                           cache_index: jax.Array, *,
+                           kv_len: int | None = None, softcap: float = 0.0,
+                           interpret: bool = True,
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """q: [B,S,KV,G,hd]; k_new/v_new: [B,S,KV,hd]; pools: [NB,bs,KV,hd];
+    tables: [B,W] int32; cache_index: [B] int32.  Returns (k_pool,
+    v_pool, out[B,S,KV,G,hd]) with the pools updated in place (aliased).
+    """
+    b, s_len, kvh, g, hd = q.shape
+    nb, bs = k_pool.shape[:2]
+    w = block_table.shape[1]
+    t = w * bs if kv_len is None else min(kv_len, w * bs)
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    pool_spec = pl.BlockSpec((nb, bs, kvh, hd), lambda i: (0, 0, 0, 0))
+
+    kernel = functools.partial(_paged_attention_kernel, s_len=s_len, bs=bs,
+                               w=w, t=t, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            smem,                                               # cache_index
+            smem,                                               # block_table
+            smem,                                               # write_table
+            pl.BlockSpec((1, s_len, kvh, g, hd),
+                         lambda i: (i, 0, 0, 0, 0)),            # q
+            pl.BlockSpec((1, s_len, kvh, hd),
+                         lambda i: (i, 0, 0, 0)),               # k_new
+            pl.BlockSpec((1, s_len, kvh, hd),
+                         lambda i: (i, 0, 0, 0)),               # v_new
+            pool_spec,                                          # k_pool
+            pool_spec,                                          # v_pool
+        ],
+        out_specs=(
+            pool_spec,
+            pool_spec,
+            pl.BlockSpec((1, s_len, kvh, g, hd),
+                         lambda i: (i, 0, 0, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+            jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+            jax.ShapeDtypeStruct((b, s_len, kvh, g, hd), v_pool.dtype),
+        ),
+        input_output_aliases={6: 0, 7: 1},
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(cache_index, block_table, write_table, q, k_new, v_new, k_pool,
+      v_pool)

@@ -1,0 +1,223 @@
+"""The kernel-backend registry: one switch for every Pallas kernel.
+
+Before this module each kernel family carried its own ``_INTERPRET``
+module global and per-call ``interpret=`` / ``block_m=`` kwargs, so
+flipping the serving stack between the XLA oracle and the kernels meant
+touching every call site.  The registry replaces all of that with one
+ambient selection:
+
+  * :class:`KernelBackend` — ``xla`` (the pure-jnp oracle composition),
+    ``pallas`` (the compiled TPU kernel), ``interpret`` (the same kernel
+    body run through the Pallas interpreter — CPU validation).
+  * :func:`use_backend` — a context manager installing an ambient
+    default plus per-kernel overrides
+    (``use_backend("pallas", gf2_mvm="xla")``); frames nest, inner
+    frames win.
+  * :func:`get_backend` — the current selection for a kernel (``None``
+    when nothing is installed: each call site then applies its own
+    documented default, e.g. :func:`native_backend` for direct op
+    calls).
+
+Resolution happens *eagerly in the op wrappers* (plain Python, outside
+``jax.jit``), so the ambient backend is read at trace time — a serving
+engine constructed under one backend can never serve a stale cache
+compiled for another.
+
+The registry also owns the tiling policy the kernel families used to
+duplicate: :func:`choose_block_m` (the adaptive decode M block) and
+:func:`pad_to`.  An *explicit* ``block_m`` below the backend's sublane
+floor now raises :class:`KernelTileError` instead of silently running a
+tile the hardware cannot form.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import threading
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+
+class KernelBackend(enum.Enum):
+    """Where a kernel-backed op executes.
+
+    XLA       — the pure-jnp oracle composition (bit-exact reference).
+    PALLAS    — the compiled Pallas TPU kernel.
+    INTERPRET — the Pallas interpreter: the same kernel body traced into
+                XLA on any backend (CPU validation of kernel logic).
+    """
+    XLA = "xla"
+    PALLAS = "pallas"
+    INTERPRET = "interpret"
+
+    def __str__(self) -> str:  # "pallas" in messages, not "KernelBackend..."
+        return self.value
+
+
+class KernelTileError(ValueError):
+    """An explicitly requested tile cannot be formed on the backend."""
+
+
+def coerce_backend(value: KernelBackend | str | None,
+                   ) -> KernelBackend | None:
+    """Accept the enum, its string value, or None (= unset)."""
+    if value is None or isinstance(value, KernelBackend):
+        return value
+    try:
+        return KernelBackend(str(value).lower())
+    except ValueError:
+        raise ValueError(
+            f"unknown kernel backend {value!r}; expected one of "
+            f"{[b.value for b in KernelBackend]}") from None
+
+
+# The selection stack is thread-local: the serving front-end drives
+# schedulers from worker threads, and one thread's use_backend frame
+# must not leak into another's trace.
+_STATE = threading.local()
+
+
+def _stack() -> list[tuple[KernelBackend | None,
+                           dict[str, KernelBackend | None]]]:
+    st = getattr(_STATE, "stack", None)
+    if st is None:
+        st = _STATE.stack = []
+    return st
+
+
+def get_backend(kernel: str | None = None) -> KernelBackend | None:
+    """The currently selected backend for ``kernel`` (innermost frame
+    wins; a frame's per-kernel override beats its default).  ``None``
+    when no frame selects anything — callers then apply their own
+    default."""
+    for default, overrides in reversed(_stack()):
+        if kernel is not None and kernel in overrides:
+            return overrides[kernel]
+        if default is not None:
+            return default
+    return None
+
+
+@contextlib.contextmanager
+def use_backend(backend: KernelBackend | str | None = None,
+                **per_kernel: KernelBackend | str | None):
+    """Install an ambient backend default and/or per-kernel overrides.
+
+    ``use_backend("pallas")`` routes every kernel-backed op through its
+    Pallas kernel; ``use_backend("pallas", gf2_mvm="xla")`` additionally
+    pins one kernel to its oracle.  Frames nest; the innermost wins.
+    """
+    frame = (coerce_backend(backend),
+             {k: coerce_backend(v) for k, v in per_kernel.items()})
+    st = _stack()
+    st.append(frame)
+    try:
+        yield
+    finally:
+        st.pop()
+
+
+def native_backend() -> KernelBackend:
+    """The platform's natural kernel backend: compiled Pallas on TPU,
+    the interpreter elsewhere (the old per-family ``_INTERPRET``
+    defaults, centralised)."""
+    return (KernelBackend.PALLAS if jax.default_backend() == "tpu"
+            else KernelBackend.INTERPRET)
+
+
+def resolve_backend(backend: KernelBackend | str | None = None, *,
+                    kernel: str | None = None,
+                    interpret: bool | None = None,
+                    default: KernelBackend | str | None = None,
+                    ) -> KernelBackend:
+    """Per-call resolution: explicit arg > deprecated ``interpret=`` >
+    ambient selection (:func:`get_backend`) > caller default >
+    :func:`native_backend`.
+
+    ``interpret`` is the deprecated per-call kwarg the kernel ops
+    accepted before the registry; passing it still works for one
+    release but warns.
+    """
+    if interpret is not None:
+        warnings.warn(
+            "the per-call interpret= kwarg is deprecated; select the "
+            "backend via repro.kernels.registry (backend=... or "
+            "use_backend(...)) instead",
+            DeprecationWarning, stacklevel=3)
+        if backend is None:
+            backend = (KernelBackend.INTERPRET if interpret
+                       else KernelBackend.PALLAS)
+    b = coerce_backend(backend)
+    if b is None:
+        b = get_backend(kernel)
+    if b is None:
+        b = coerce_backend(default)
+    if b is None:
+        b = native_backend()
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Tiling policy (shared by every kernel family)
+# ---------------------------------------------------------------------------
+
+DEFAULT_BLOCK = 128     # MXU-aligned lane/contraction tile
+
+# minimum sublane rows a tile can have: the interpreter places no
+# hardware constraint beyond the f32 tile (8), real TPUs need the int8
+# sublane tile (32)
+_SUBLANE_FLOOR = {
+    KernelBackend.INTERPRET: 8,
+    KernelBackend.PALLAS: 32,
+}
+
+
+def tile_floor(backend: KernelBackend) -> int:
+    """The backend's minimum M-tile (sublane) size."""
+    return _SUBLANE_FLOOR.get(backend, 32)
+
+
+def choose_block_m(m: int, block_m: int | None,
+                   backend: KernelBackend) -> int:
+    """Adaptive M block: decode MVMs (M=1) must not pad rows to 128.
+
+    Returns the smallest power-of-two block covering ``m``, floored at
+    the backend's sublane tile, capped at ``block_m``.  ``block_m=None``
+    means "no caller preference" (cap at :data:`DEFAULT_BLOCK`); an
+    *explicit* ``block_m`` below the sublane floor raises
+    :class:`KernelTileError` — the old per-family helpers silently
+    returned the sub-floor tile, which the hardware cannot form.
+    """
+    floor = tile_floor(backend)
+    if block_m is None:
+        block_m = DEFAULT_BLOCK
+    elif block_m < floor:
+        raise KernelTileError(
+            f"explicit block_m={block_m} is below the {backend} sublane "
+            f"floor of {floor} rows; pass block_m >= {floor} or let the "
+            f"registry choose the tile")
+    if m >= block_m:
+        return block_m
+    return min(block_m, max(floor, 1 << (max(m, 1) - 1).bit_length()))
+
+
+def pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple of ``mult``."""
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def warn_deprecated_blocks(stacklevel: int = 3) -> None:
+    """One release of grace for the per-call block-size kwargs."""
+    warnings.warn(
+        "per-call block_m/block_n/block_k kwargs are deprecated; the "
+        "registry's tiling helper (repro.kernels.registry.choose_block_m) "
+        "now owns tile selection",
+        DeprecationWarning, stacklevel=stacklevel)

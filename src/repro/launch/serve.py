@@ -115,6 +115,13 @@ def main():
                     help="fault-injection spec for --frontend, e.g. "
                          "'seed=0,fault=0.05,victim=0.02,stall=0.05,"
                          "latency_ms=40' (empty/'off' = disabled)")
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "xla", "pallas", "interpret"],
+                    help="kernel backend for the serving hot path "
+                         "(repro.kernels.registry): the XLA oracle "
+                         "composition, the compiled Pallas TPU kernels, "
+                         "or the Pallas interpreter (CPU validation); "
+                         "auto keeps the pre-registry defaults")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree: shard prepacked "
                          "weights and the KV pool over a 1-D model mesh "
@@ -136,7 +143,7 @@ def main():
                       max_len=args.prompt_len + args.gen + 1,
                       prepack=not args.no_prepack,
                       use_scan=not args.loop,
-                      mesh=mesh)
+                      mesh=mesh, kernel_backend=_kernel_backend(args))
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
@@ -153,6 +160,12 @@ def main():
     print("sample:", out[0, :32].tolist())
 
 
+def _kernel_backend(args):
+    """--kernel-backend auto = None (each call site's documented
+    default); anything else pins the registry selection."""
+    return None if args.kernel_backend == "auto" else args.kernel_backend
+
+
 def serve_continuous(cfg, params, args, mesh=None) -> None:
     """Drive the slot-based scheduler over a synthetic arrival trace."""
     n = args.requests or 4 * args.batch_slots
@@ -162,7 +175,8 @@ def serve_continuous(cfg, params, args, mesh=None) -> None:
         prepack=not args.no_prepack, kv_block_size=args.kv_block_size,
         num_kv_blocks=args.num_kv_blocks,
         chunked_prefill=args.chunked_prefill,
-        prefix_cache=args.prefix_cache, mesh=mesh)
+        prefix_cache=args.prefix_cache, mesh=mesh,
+        kernel_backend=_kernel_backend(args))
     if args.frontend:
         serve_frontend(cfg, sched, args, n)
         return

@@ -16,6 +16,8 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core import ibert
 from repro.dist.sharding import shard_act, tp_serving
+from repro.kernels import registry as _kreg
+from repro.kernels.paged_attention import ops as _paops
 from repro.models import layers
 
 Params = dict[str, Any]
@@ -23,6 +25,16 @@ Params = dict[str, Any]
 NEG_INF = -1e30
 CHUNK_Q = 1024          # online-softmax query block
 CHUNK_K = 1024          # online-softmax key block
+
+# Module-level alias: the kernel-dispatch mutation self-test knocks this
+# out with an XLA shim to prove the auditor notices a decode step
+# silently falling back off the Pallas path (analysis/mutations.py).
+_paged_attention = _paops.paged_attention
+
+# The kernel keeps the whole [S, T] score tile per row resident; decode
+# (S=1) and small chunk-prefill steps qualify, long chunks stay on the
+# XLA composition.
+_KERNEL_MAX_S = 64
 
 
 def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
@@ -282,14 +294,32 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         assert s <= 2 * CHUNK_Q, \
             f"paged prefill chunk of {s} tokens exceeds {2 * CHUNK_Q}; " \
             f"enable chunked_prefill to stream long prompts"
-        cache, k_all, v_all, qpos = _paged_update_and_gather(
-            cache, k, v, block_table, cache_index, kv_len,
-            write_table=write_table)
-        kpos = jnp.arange(k_all.shape[1])
-        mask = kpos[None, None, :] <= qpos[..., None]              # [B,S,T]
-        out = _plain_attention(q, k_all, v_all, mask,
-                               cfg.attn_logit_softcap,
-                               ibert_mode=pum.ibert)
+        backend = _kreg.get_backend("paged_attention")
+        if (backend not in (None, _kreg.KernelBackend.XLA)
+                and not tp_serving() and not pum.ibert
+                and s <= _KERNEL_MAX_S):
+            # fused kernel: block-table walk (scatter through the write
+            # table, gather through the read table) + plain-softmax
+            # attention in one pallas_call, bit-identical to the
+            # composition below for scheduler-reachable states
+            with jax.named_scope("paged_attn_kernel"):
+                kp, vp, out = _paged_attention(
+                    q, k, v, cache["k_pool"], cache["v_pool"],
+                    block_table,
+                    write_table if write_table is not None
+                    else block_table,
+                    cache_index, kv_len=kv_len,
+                    softcap=cfg.attn_logit_softcap, backend=backend)
+            cache = {**cache, "k_pool": kp, "v_pool": vp}
+        else:
+            cache, k_all, v_all, qpos = _paged_update_and_gather(
+                cache, k, v, block_table, cache_index, kv_len,
+                write_table=write_table)
+            kpos = jnp.arange(k_all.shape[1])
+            mask = kpos[None, None, :] <= qpos[..., None]          # [B,S,T]
+            out = _plain_attention(q, k_all, v_all, mask,
+                                   cfg.attn_logit_softcap,
+                                   ibert_mode=pum.ibert)
     elif cache is not None and cross_kv is None:
         # decode/prefill-into-cache: write the new K/V at cache_index —
         # a scalar (whole batch at one depth) or a [B] vector (slot-wise

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.dist import sharding as shd
+from repro.kernels import registry as kreg
 from repro.models import lm
 from repro.serve.errors import RequestTooLarge
 
@@ -105,7 +106,10 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 128,
                  prepack: bool | None = None, use_scan: bool = True,
-                 mesh: jax.sharding.Mesh | None = None):
+                 mesh: jax.sharding.Mesh | None = None,
+                 kernel_backend: kreg.KernelBackend | str | None = None):
+        # normalise early so a typo fails at construction, not first step
+        self.kernel_backend = kreg.coerce_backend(kernel_backend)
         if prepack is None:
             prepack = cfg.pum.mode in ("int8", "pum")
         if prepack and cfg.pum.mode in ("int8", "pum"):
@@ -133,13 +137,21 @@ class ServeEngine:
         self._prefill = jax.jit(self._prefill_impl)
         self._scan_gen = self._build_scan_generate()
 
+    @contextlib.contextmanager
     def mesh_ctx(self):
         """The trace/dispatch context: every jitted serving step is
         traced inside it, so ``shard_act``/``tp_replicate`` constraints
-        bind to the engine's mesh (a no-op context without one)."""
-        if self.mesh is None:
-            return contextlib.nullcontext()
-        return shd.use_mesh(self.mesh, tp_serving=True)
+        bind to the engine's mesh (a no-op context without one) and the
+        engine's kernel-backend selection is ambient for every MVM /
+        attention dispatch (``repro.kernels.registry``)."""
+        with contextlib.ExitStack() as stack:
+            if self.mesh is not None:
+                stack.enter_context(shd.use_mesh(self.mesh,
+                                                 tp_serving=True))
+            if self.kernel_backend is not None:
+                stack.enter_context(
+                    kreg.use_backend(self.kernel_backend))
+            yield
 
     def _prefill_impl(self, params, tokens: jax.Array,
                       encoder_frames: jax.Array | None,

@@ -325,6 +325,12 @@ class ContinuousBatchingScheduler:
     (``dist.sharding.serve_param_specs`` / ``serve_state_specs``) and
     every jitted step runs mesh-aware; completions stay bit-identical
     to the single-device oracle.
+
+    ``kernel_backend`` selects the kernel backend
+    (:mod:`repro.kernels.registry`: ``"xla"`` / ``"pallas"`` /
+    ``"interpret"``) ambient for every jitted step; ``None`` keeps the
+    pre-registry defaults (the XLA composition unless ``use_kernel``).
+    Completions are bit-identical across backends.
     """
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int = 4,
@@ -333,7 +339,8 @@ class ContinuousBatchingScheduler:
                  chunked_prefill: bool = False,
                  mesh: jax.sharding.Mesh | None = None,
                  prefix_cache: bool = False,
-                 prefix_cache_entries: int = 0):
+                 prefix_cache_entries: int = 0,
+                 kernel_backend=None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if chunked_prefill and kv_block_size <= 0:
@@ -345,7 +352,8 @@ class ContinuousBatchingScheduler:
                 "prefix_cache shares paged pool blocks between requests; "
                 "set kv_block_size > 0 to enable it")
         self.engine = ServeEngine(cfg, params, max_len=max_len,
-                                  prepack=prepack, mesh=mesh)
+                                  prepack=prepack, mesh=mesh,
+                                  kernel_backend=kernel_backend)
         self.mesh = mesh
         self.cfg = self.engine.cfg
         self.params = self.engine.params

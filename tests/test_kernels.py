@@ -1,5 +1,5 @@
 """Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
-(interpret=True executes the kernel body on CPU)."""
+(backend="interpret" executes the kernel body on CPU)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -45,7 +45,7 @@ def test_bitslice_ops_wrapper_padding(seed, m, k, n):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.integers(-100, 101, size=(m, k)), jnp.int32)
     w = jnp.asarray(rng.integers(-127, 128, size=(k, n)), jnp.int32)
-    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, interpret=True)
+    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, backend="interpret")
     want = np.asarray(x, np.int64) @ np.asarray(w, np.int64)
     assert got.shape == (m, n)
     np.testing.assert_array_equal(np.asarray(got, np.int64), want)
@@ -55,7 +55,7 @@ def test_bitslice_ops_batched_input():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.integers(-50, 51, size=(2, 3, 40)), jnp.int32)
     w = jnp.asarray(rng.integers(-127, 128, size=(40, 24)), jnp.int32)
-    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, interpret=True)
+    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, backend="interpret")
     want = np.einsum("abk,kn->abn", np.asarray(x, np.int64),
                      np.asarray(w, np.int64))
     np.testing.assert_array_equal(np.asarray(got, np.int64), want)
@@ -66,7 +66,7 @@ def test_bitslice_int32_accumulation_no_overflow_at_bounds():
     k = 512
     x = jnp.full((128, k), 127, jnp.int8)
     w = jnp.full((k, 128), 127, jnp.int32)
-    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, interpret=True)
+    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, backend="interpret")
     assert int(got[0, 0]) == 127 * 127 * k
 
 
@@ -89,7 +89,7 @@ def test_bitslice_adaptive_block_m_no_128_padding():
     rng = np.random.default_rng(11)
     x = jnp.asarray(rng.integers(-127, 128, size=(1, 256)), jnp.int32)
     w = jnp.asarray(rng.integers(-127, 128, size=(256, 128)), jnp.int32)
-    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, interpret=True)
+    got = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2, backend="interpret")
     want = np.asarray(x, np.int64) @ np.asarray(w, np.int64)
     assert got.shape == (1, 128)
     np.testing.assert_array_equal(np.asarray(got, np.int64), want)
@@ -105,7 +105,7 @@ def test_bitslice_adaptive_block_m_no_128_padding():
 
     jaxpr = jax.make_jaxpr(
         lambda a, b: bitslice_mvm(a, b, weight_bits=8, bits_per_slice=2,
-                                  interpret=True))(x, w)
+                                  backend="interpret"))(x, w)
     # activation intermediates are [M_padded, K=256]; the kernel's weight
     # tiles are [bk, bn] and never have K columns
     act_rows = {v.aval.shape[0] for eqn in all_eqns(jaxpr.jaxpr)
@@ -125,9 +125,9 @@ def test_bitslice_mvm_planes_matches_per_call_slicing():
         w = jnp.asarray(rng.integers(-127, 128, size=(96, 72)), jnp.int32)
         planes = bitslice.slice_planes_signed(w, 8, 2).astype(jnp.int8)
         got = bitslice_mvm_planes(x, planes, bits_per_slice=2,
-                                  interpret=True)
+                                  backend="interpret")
         want = bitslice_mvm(x, w, weight_bits=8, bits_per_slice=2,
-                            interpret=True)
+                            backend="interpret")
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -154,7 +154,7 @@ def test_gf2_ops_wrapper(seed, m, k, n):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.integers(0, 2, size=(m, k)), jnp.int8)
     a = jnp.asarray(rng.integers(0, 2, size=(k, n)), jnp.int8)
-    got = gf2_mvm(x, a, interpret=True)
+    got = gf2_mvm(x, a, backend="interpret")
     want = (np.asarray(x, np.int64) @ np.asarray(a, np.int64)) & 1
     assert got.shape == (m, n)
     np.testing.assert_array_equal(np.asarray(got, np.int64), want)
@@ -166,7 +166,8 @@ def test_gf2_linearity_property():
     a = jnp.asarray(rng.integers(0, 2, size=(128, 128)), jnp.int8)
     x = jnp.asarray(rng.integers(0, 2, size=(16, 128)), jnp.int8)
     y = jnp.asarray(rng.integers(0, 2, size=(16, 128)), jnp.int8)
-    fx = np.asarray(gf2_mvm(x, a, interpret=True))
-    fy = np.asarray(gf2_mvm(y, a, interpret=True))
-    fxy = np.asarray(gf2_mvm(jnp.bitwise_xor(x, y), a, interpret=True))
+    fx = np.asarray(gf2_mvm(x, a, backend="interpret"))
+    fy = np.asarray(gf2_mvm(y, a, backend="interpret"))
+    fxy = np.asarray(gf2_mvm(jnp.bitwise_xor(x, y), a,
+                             backend="interpret"))
     np.testing.assert_array_equal(fxy, fx ^ fy)
