@@ -2,8 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-dist test-serve test-tp test-chaos test-prefix \
-	test-kernels lint quickstart bench bench-smoke bench-baseline \
-	bench-check audit
+	test-kernels test-spec lint quickstart bench bench-smoke \
+	bench-baseline bench-check audit
 
 # tier-1 verify; test_distributed.py spawns its own subprocesses with
 # XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -65,6 +65,15 @@ test-prefix:
 # paged attention), and the scheduler leg serving under each backend
 test-kernels:
 	$(PY) -m pytest -q tests/test_kernel_backends.py tests/test_kernels.py
+
+# speculative-decoding suite (ISSUE 10): draft-and-verify bit-identical
+# to the single-token oracle across k in {1,2,4} x families
+# {dense,xlstm,hybrid} x modes {bf16,int8,pum} x paged block sizes,
+# drafter-independence (wrong/perfect/model drafters), KV-pool rollback
+# == a k=0 replay, allocator partition after rollback storms, and a
+# chaos-storm leg
+test-spec:
+	$(PY) -m pytest -q tests/test_spec.py
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -472,6 +472,71 @@ def bench_serve_prefix(small: bool = False) -> list[Row]:
     return rows
 
 
+def bench_serve_spec(small: bool = False) -> list[Row]:
+    """Speculative decoding (ISSUE 10): n-gram draft-and-verify vs the
+    single-token decode it must never deviate from.
+
+    One seeded greedy shared-prefix trace runs through a k=0 scheduler
+    and a speculate_k=4 one (n-gram prompt-lookahead self-speculation);
+    outputs are asserted identical.  The wall-clock throughput/speedup
+    rows are IGNOREd by CI's bench-check (shared runners); the
+    regression surface is the deterministic counters:
+
+      * ``k4_advance_per_step`` — mean tokens emitted per active slot
+        per decode dispatch.  Must exceed 1.0 (asserted here too):
+        every accepted draft token is a decode dispatch saved;
+      * ``k4_accept_rate`` — accepted / proposed draft tokens.
+
+    Greedy decode of the small config falls into short attractor
+    cycles, which prompt-lookup drafting predicts — the win case the
+    DARTH-PUM runtime targets, where re-programming crossbars per
+    token dominates and batching k+1 positions into one array pass is
+    nearly free.
+    """
+    from repro.config import small_test_config
+    from repro.models import lm
+    from repro.serve import ContinuousBatchingScheduler, synthetic_workload
+
+    cfg = small_test_config()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    slots = 2 if small else 4
+    gen = 48
+    n = 6 if small else 12
+    spl = 4
+    max_prompt = spl + 2
+    trace = synthetic_workload(n, cfg.vocab_size, max_prompt=max_prompt,
+                               max_new=gen, eos_rate=0.0,
+                               temperature_choices=(0.0,),
+                               mean_interarrival=0.5,
+                               shared_prefix_len=spl, seed=10)
+    rows: list[Row] = []
+    outs, times = {}, {}
+    scheds = {}
+    for name, k in (("k0", 0), ("k4", 4)):
+        sched = ContinuousBatchingScheduler(
+            cfg, params, num_slots=slots, max_len=max_prompt + gen + 1,
+            kv_block_size=4, speculate_k=k)
+        scheds[name] = sched
+        sched.run(trace)                           # warm compile caches
+        t0 = time.perf_counter()
+        out = sched.run(trace)
+        dt = time.perf_counter() - t0
+        outs[name] = {rid: c.tokens for rid, c in out.items()}
+        times[name] = dt
+        toks = sum(len(t) for t in outs[name].values())
+        rows.append((f"serve_spec/{name}_toks_per_s", toks / dt,
+                     "tok/s"))
+    assert outs["k0"] == outs["k4"]     # speculation never changes output
+    st = scheds["k4"].spec_stats()
+    assert st["advance_per_step"] > 1.0            # speculation must win
+    rows += [("serve_spec/k4_advance_per_step", st["advance_per_step"],
+              "tok/step"),
+             ("serve_spec/k4_accept_rate", st["acceptance_rate"],
+              "frac"),
+             ("serve_spec/k4_speedup", times["k0"] / times["k4"], "x")]
+    return rows
+
+
 def bench_serve_kernel(small: bool = False) -> list[Row]:
     """ISSUE 9 decode kernels vs the XLA composition they replace.
 
@@ -568,5 +633,6 @@ ALL_MICRO = {
     "serve_batch": bench_serve_batch,
     "serve_load": bench_serve_load,
     "serve_prefix": bench_serve_prefix,
+    "serve_spec": bench_serve_spec,
     "serve_kernel": bench_serve_kernel,
 }

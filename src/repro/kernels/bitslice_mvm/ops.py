@@ -31,21 +31,8 @@ from repro.kernels.bitslice_mvm.kernel import (bitslice_mvm_pallas,
 from repro.kernels.bitslice_mvm.ref import bitslice_mvm_ref
 from repro.kernels.registry import KernelBackend
 
-# deprecated compat aliases: tile policy now lives in the registry
+# deprecated compat alias: tile policy now lives in the registry
 _pad_to = registry.pad_to
-
-
-def _choose_block_m(m: int, block_m: int, interpret: bool) -> int:
-    """Deprecated shim — use :func:`repro.kernels.registry.choose_block_m`.
-
-    Kept one release for external callers of the old private helper;
-    the explicit-``block_m`` sublane check applies (sub-floor tiles now
-    raise ``KernelTileError`` instead of silently misconfiguring the
-    hardware tile).
-    """
-    backend = (KernelBackend.INTERPRET if interpret
-               else KernelBackend.PALLAS)
-    return registry.choose_block_m(m, block_m, backend)
 
 
 def _resolve(backend, interpret, block_m, block_n, block_k):

@@ -115,6 +115,12 @@ def main():
                     help="fault-injection spec for --frontend, e.g. "
                          "'seed=0,fault=0.05,victim=0.02,stall=0.05,"
                          "latency_ms=40' (empty/'off' = disabled)")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="speculative decoding: draft this many tokens "
+                         "per slot per step (n-gram prompt-lookahead "
+                         "self-speculation) and verify them in one "
+                         "batched forward — output stays bit-identical "
+                         "to --speculate-k 0; requires --kv-block-size")
     ap.add_argument("--kernel-backend", default="auto",
                     choices=["auto", "xla", "pallas", "interpret"],
                     help="kernel backend for the serving hot path "
@@ -176,7 +182,8 @@ def serve_continuous(cfg, params, args, mesh=None) -> None:
         num_kv_blocks=args.num_kv_blocks,
         chunked_prefill=args.chunked_prefill,
         prefix_cache=args.prefix_cache, mesh=mesh,
-        kernel_backend=_kernel_backend(args))
+        kernel_backend=_kernel_backend(args),
+        speculate_k=args.speculate_k)
     if args.frontend:
         serve_frontend(cfg, sched, args, n)
         return
@@ -207,6 +214,8 @@ def serve_continuous(cfg, params, args, mesh=None) -> None:
           f"steps p50={sorted(lat)[len(lat) // 2]} max={max(lat)}")
     if args.prefix_cache:
         print("prefix-cache:", json.dumps(sched.prefix_stats()))
+    if args.speculate_k > 0:
+        print("speculative:", json.dumps(sched.spec_stats()))
     first = out[reqs[0].rid]
     print("sample:", (first.prompt + first.tokens)[:32])
 

@@ -179,6 +179,28 @@ def _chunked_attention(q, k, v, q_offset, softcap):
     return out[:, :s]
 
 
+def paged_write_cells(write_table: jax.Array, cache_index: jax.Array,
+                      s: int, block_size: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """The (physical block, in-block offset) each of a row's next ``s``
+    logical positions scatters into.
+
+    ``write_table``: [B, W] physical block ids; ``cache_index``: [B]
+    int32 first position.  Positions past the table width — reachable
+    only by speculative draft tokens probing beyond a slot's funded
+    window — route to the trash block (id 0), exactly like inactive
+    rows, instead of wrapping into the slot's own last live block.
+    Returns ``(phys, off)``, both [B, S].
+    """
+    b, w = write_table.shape
+    pos = cache_index[:, None] + jnp.arange(s, dtype=cache_index.dtype)
+    cols = pos // block_size
+    phys = jnp.take_along_axis(write_table, jnp.clip(cols, 0, w - 1),
+                               axis=1)
+    phys = jnp.where(cols < w, phys, jnp.zeros((), phys.dtype))
+    return phys, pos % block_size
+
+
 def _paged_update_and_gather(cache: Params, k: jax.Array, v: jax.Array,
                              block_table: jax.Array, cache_index: jax.Array,
                              kv_len: int | None,
@@ -212,9 +234,7 @@ def _paged_update_and_gather(cache: Params, k: jax.Array, v: jax.Array,
     if write_table is None:
         write_table = block_table
     pos = cache_index[:, None] + jnp.arange(s)[None, :]            # [B, S]
-    slot_col = jnp.clip(pos // bs, 0, w - 1)
-    phys = jnp.take_along_axis(write_table, slot_col, axis=1)      # [B, S]
-    off = pos % bs
+    phys, off = paged_write_cells(write_table, cache_index, s, bs)
     with jax.named_scope("kv_pool_write"):
         k_pool = cache["k_pool"].at[phys, off].set(
             k.astype(cache["k_pool"].dtype))

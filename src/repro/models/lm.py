@@ -196,6 +196,7 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
             block_table: jax.Array | None = None,
             kv_len: int | None = None,
             write_table: jax.Array | None = None,
+            collect_states: bool = False,
             ) -> tuple[jax.Array, list[Any] | None,
                        dict[str, jax.Array]]:
     """tokens: [B, S] int32 -> (logits, states', aux).
@@ -212,6 +213,12 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     then scatters/gathers through the shared block pool.
     VLM: image_embeds [B, N, D] prepended.  Enc-dec: encoder_frames
     [B, T, D] runs the encoder (or pass precomputed ``encoder_out``).
+    ``collect_states``: recurrent leaves of the returned states gain a
+    per-position axis — [n_groups, B, S, ...], index j holding the
+    state after consuming position j (bit-identical to stepping one
+    token at a time).  Paged/contiguous KV leaves are unchanged.  The
+    speculative verify step uses this to adopt each row's state at its
+    accepted depth.
     """
     b, s = tokens.shape
     with jax.named_scope("embed"):
@@ -259,7 +266,8 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
                     blk_params[j], x, cfg, j, positions=positions,
                     state=st, cache_index=cache_index,
                     encoder_out=encoder_out, block_table=block_table,
-                    kv_len=kv_len, write_table=write_table)
+                    kv_len=kv_len, write_table=write_table,
+                    collect_states=collect_states)
             new_states.append(st_new if st_new is not None else {})
             for k, v in aux.items():
                 aux_acc[k] = aux_acc.get(k, 0.0) + v

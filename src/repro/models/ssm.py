@@ -87,9 +87,16 @@ def _selective_params(p: Params, xc: jax.Array, cfg: ModelConfig):
 
 
 def mamba(p: Params, x: jax.Array, cfg: ModelConfig, *,
-          state: Params | None = None,
+          state: Params | None = None, collect_states: bool = False,
           ) -> tuple[jax.Array, Params | None]:
-    """x: [B, S, D] -> ([B, S, D], state')."""
+    """x: [B, S, D] -> ([B, S, D], state').
+
+    ``collect_states`` (needs ``state``): state leaves gain a
+    per-position axis — index t holds the {h, conv window} a t+1-token
+    single-step decode would carry, bit-identical by construction (h
+    comes out of the same scan; the conv window at position t is rows
+    t+1..t+W-1 of the extended window, exactly what ``window[:, 1:]``
+    rolls to one token at a time)."""
     bsz, s, d = x.shape
     inner = _inner(cfg)
     xz = layers.linear(p["in_proj"], x, cfg.pum)
@@ -101,7 +108,7 @@ def mamba(p: Params, x: jax.Array, cfg: ModelConfig, *,
         dt, b_t, c_t, a = _selective_params(p, xc, cfg)
         y = _scan_train(xc, dt, b_t, c_t, a, p["d_skip"])
         new_state = None
-    elif s > 1:
+    elif s > 1 or collect_states:
         # prefill into state: full-seq compute + final recurrent state.
         # The causal conv must see the carried window, not zero padding —
         # chunked prefill re-enters here mid-prompt (for a fresh state
@@ -119,12 +126,20 @@ def mamba(p: Params, x: jax.Array, cfg: ModelConfig, *,
             db = dtt[:, :, None] * btt[:, None, :]
             h = h * da + db * xct[:, :, None]
             yt = jnp.einsum("bis,bs->bi", h, ctt) + p["d_skip"] * xct
-            return h, yt
+            return h, ((yt, h) if collect_states else yt)
 
         xs_t = tuple(t.swapaxes(0, 1) for t in (xc, dt, b_t, c_t))
         h, ys = jax.lax.scan(step, state["h"].astype(jnp.float32), xs_t)
+        if collect_states:
+            ys, hs = ys
+            win = cfg.ssm_conv_width - 1
+            convs = jnp.stack([ext[:, t + 1: t + 1 + win] for t in range(s)],
+                              axis=1)                   # [B, S, W-1, inner]
+            new_state = {"h": jnp.moveaxis(hs, 0, 1), "conv": convs}
+        else:
+            new_state = {"h": h,
+                         "conv": ext[:, -(cfg.ssm_conv_width - 1):]}
         y = ys.swapaxes(0, 1)
-        new_state = {"h": h, "conv": ext[:, -(cfg.ssm_conv_width - 1):]}
     else:
         # decode: roll the conv window, single recurrence step.  The
         # taps accumulate in the same order as ``_causal_conv_train``

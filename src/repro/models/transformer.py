@@ -122,12 +122,16 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, layer_idx: int, *,
                 block_table: jax.Array | None = None,
                 kv_len: int | None = None,
                 write_table: jax.Array | None = None,
+                collect_states: bool = False,
                 ) -> tuple[jax.Array, Params | None,
                            dict[str, jax.Array]]:
     """Returns (x, new_state, aux_losses).  ``block_table``/``kv_len``
     select the paged KV path in self-attention (serve.kv_pool);
     ``write_table`` re-routes its scatters (prefix-cache shared blocks
-    are read-only)."""
+    are read-only).  ``collect_states``: recurrent mixers return their
+    state after *every* position ([B, S, ...] leaves) instead of only
+    the final one — the speculative verify step's variable-advance
+    hook (KV caches are unaffected; rollback handles those)."""
     mk = mixer_kind(cfg, layer_idx)
     fk = ffn_kind(cfg, layer_idx)
     aux: dict[str, jax.Array] = {}
@@ -141,11 +145,14 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, layer_idx: int, *,
             block_table=block_table, kv_len=kv_len,
             write_table=write_table)
     elif mk == "mamba":
-        h, state = ssm.mamba(p["mamba"], h, cfg, state=state)
+        h, state = ssm.mamba(p["mamba"], h, cfg, state=state,
+                             collect_states=collect_states)
     elif mk == "mlstm":
-        h, state = xlstm.mlstm(p["mlstm"], h, cfg, state=state)
+        h, state = xlstm.mlstm(p["mlstm"], h, cfg, state=state,
+                               collect_states=collect_states)
     elif mk == "slstm":
-        h, state = xlstm.slstm(p["slstm"], h, cfg, state=state)
+        h, state = xlstm.slstm(p["slstm"], h, cfg, state=state,
+                               collect_states=collect_states)
     x = x + h
 
     if "cross" in p and encoder_out is not None:

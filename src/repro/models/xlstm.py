@@ -66,8 +66,12 @@ def make_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
 
 
 def mlstm(p: Params, x: jax.Array, cfg: ModelConfig, *,
-          state: Params | None = None,
+          state: Params | None = None, collect_states: bool = False,
           ) -> tuple[jax.Array, Params | None]:
+    """``collect_states`` (needs ``state``): the returned state leaves
+    gain a per-position axis — [B, S, ...] with index t the state after
+    consuming token t, bit-identical to t+1 single-token steps (the
+    recurrence is the same scan either way)."""
     b, s, d = x.shape
     inner, heads, hd = _dims(cfg)
     qkv = layers.linear(p["wqkv"], x, cfg.pum)
@@ -82,7 +86,7 @@ def mlstm(p: Params, x: jax.Array, cfg: ModelConfig, *,
     if state is None:
         y = _mlstm_parallel(q, k, v, i_pre, f_pre)
         new_state = None
-    elif s > 1:
+    elif s > 1 or collect_states:
         # prefill into state: sequential recurrence (small-scale serving)
         def step(carry, args):
             c0, n0, m0 = carry
@@ -99,15 +103,22 @@ def mlstm(p: Params, x: jax.Array, cfg: ModelConfig, *,
                 "bhd,bhd->bh", n1, qt.astype(jnp.float32))), jnp.exp(-m1))
             ht = jnp.einsum("bhde,bhe->bhd", c1,
                             qt.astype(jnp.float32)) / den[..., None]
-            return (c1, n1, m1), ht
+            ys = (ht, (c1, n1, m1)) if collect_states else ht
+            return (c1, n1, m1), ys
 
         xs_t = tuple(t.swapaxes(0, 1) for t in (q, k, v, i_pre, f_pre))
-        (c, n, m), hs = jax.lax.scan(
-            step, (state["c"].astype(jnp.float32),
-                   state["n"].astype(jnp.float32),
-                   state["m"].astype(jnp.float32)), xs_t)
+        carry0 = (state["c"].astype(jnp.float32),
+                  state["n"].astype(jnp.float32),
+                  state["m"].astype(jnp.float32))
+        if collect_states:
+            (c, n, m), (hs, (cs, ns, ms)) = jax.lax.scan(step, carry0, xs_t)
+            new_state = {"c": jnp.moveaxis(cs, 0, 1),
+                         "n": jnp.moveaxis(ns, 0, 1),
+                         "m": jnp.moveaxis(ms, 0, 1)}
+        else:
+            (c, n, m), hs = jax.lax.scan(step, carry0, xs_t)
+            new_state = {"c": c, "n": n, "m": m}
         y = hs.swapaxes(0, 1).astype(x.dtype)
-        new_state = {"c": c, "n": n, "m": m}
     else:
         # single-step recurrent update (stabilised exponential gating)
         logf = jax.nn.log_sigmoid(f_pre[:, 0])             # [B, H]
@@ -244,8 +255,10 @@ def _slstm_step(carry, gates):
 
 
 def slstm(p: Params, x: jax.Array, cfg: ModelConfig, *,
-          state: Params | None = None,
+          state: Params | None = None, collect_states: bool = False,
           ) -> tuple[jax.Array, Params | None]:
+    """``collect_states``: as in :func:`mlstm` — per-position [B, S, ...]
+    state leaves from the same scan (needs ``state``)."""
     b, s, d = x.shape
     inner, _, _ = _dims(cfg)
     z = layers.linear(p["wz"], x, cfg.pum).astype(jnp.float32)
@@ -255,7 +268,7 @@ def slstm(p: Params, x: jax.Array, cfg: ModelConfig, *,
     o = jax.nn.sigmoid(layers.linear(p["wo"], x, cfg.pum)
                        .astype(jnp.float32))
 
-    if state is None or s > 1:
+    if state is None or s > 1 or collect_states:
         if state is None:
             carry = (jnp.zeros((b, inner)), jnp.zeros((b, inner)),
                      jnp.full((b, inner), -1e30))
@@ -264,9 +277,18 @@ def slstm(p: Params, x: jax.Array, cfg: ModelConfig, *,
                      state["n"].astype(jnp.float32),
                      state["m"].astype(jnp.float32))
         gates = tuple(t.swapaxes(0, 1) for t in (z, i_pre, logf, o))
-        (c, n, m), hs = jax.lax.scan(_slstm_step, carry, gates)
+        if collect_states and state is not None:
+            def step(carry, g):
+                carry, h = _slstm_step(carry, g)
+                return carry, (h, carry)
+            (c, n, m), (hs, (cs, ns, ms)) = jax.lax.scan(step, carry, gates)
+            new_state = {"c": jnp.moveaxis(cs, 0, 1),
+                         "n": jnp.moveaxis(ns, 0, 1),
+                         "m": jnp.moveaxis(ms, 0, 1)}
+        else:
+            (c, n, m), hs = jax.lax.scan(_slstm_step, carry, gates)
+            new_state = None if state is None else {"c": c, "n": n, "m": m}
         y = hs.swapaxes(0, 1).astype(x.dtype)
-        new_state = None if state is None else {"c": c, "n": n, "m": m}
     else:
         carry = (state["c"], state["n"], state["m"])
         (c, n, m), h = _slstm_step(carry, (z[:, 0], i_pre[:, 0],

@@ -1,5 +1,6 @@
 from repro.serve.chaos import ChaosInjector, ChaosPolicy
-from repro.serve.engine import ServeEngine, make_decode_step, sample_token
+from repro.serve.engine import (ServeEngine, make_decode_step,
+                                make_verify_step, sample_token)
 from repro.serve.errors import (AdmissionRejected, BlockAllocatorError,
                                 BlockNotLive, BlockOutOfRange,
                                 DeadlineExceeded, FaultInjected,
@@ -16,4 +17,7 @@ from repro.serve.policies import (QueueEntry, RequestQueue, RetryPolicy,
                                   VirtualClock)
 from repro.serve.scheduler import (Completion, ContinuousBatchingScheduler,
                                    Request, TickResult, make_slot_step,
-                                   oracle_completion, synthetic_workload)
+                                   make_spec_step, oracle_completion,
+                                   synthetic_workload)
+from repro.serve.spec import (ModelDrafter, NgramDrafter, build_drafts,
+                              resolve_drafter)

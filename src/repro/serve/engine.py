@@ -66,6 +66,32 @@ def make_decode_step(cfg: ModelConfig, scan_layers: bool = True,
     return decode_step
 
 
+def make_verify_step(cfg: ModelConfig, scan_layers: bool = True,
+                     kv_len: int | None = None):
+    """(params, states, tokens [B,S], cache_index [B], tables) ->
+    (logits [B,S,V], states').
+
+    The speculative verify forward: scores all S = k+1 positions (the
+    current token + k draft tokens) in one batched pass.  Unlike
+    :func:`make_decode_step` it keeps every position's logits, and the
+    forward runs with ``collect_states=True`` so recurrent leaves come
+    back per-position ([n_groups, B, S, ...]) — the caller adopts each
+    row's state at its accepted depth and rolls back the KV pool cells
+    of the rejected suffix (``kv_pool.spec_restore_cells``)."""
+
+    def verify_step(params, states, tokens, cache_index, *,
+                    block_table: jax.Array | None = None,
+                    write_table: jax.Array | None = None):
+        logits, states, _ = lm.forward(
+            params, tokens, cfg, states=states, cache_index=cache_index,
+            last_only=False, scan_layers=scan_layers,
+            block_table=block_table, kv_len=kv_len,
+            write_table=write_table, collect_states=True)
+        return logits, states
+
+    return verify_step
+
+
 def sample_token(logits: jax.Array, key, temperature=0.0) -> jax.Array:
     """logits: [B, 1, V] -> [B, 1] int32 (greedy at temperature 0).
 
@@ -102,14 +128,25 @@ class ServeEngine:
     mesh — a 1-D ``model`` mesh for tensor-parallel serving (params are
     placed with ``serve_param_specs`` and every step traces mesh-aware;
     ``None`` = single device, unchanged).
+    speculate_k — default draft depth for speculative decode: the
+    continuous-batching scheduler built on this engine proposes k
+    tokens per slot and verifies them in one step (0 = classic
+    one-token-per-step decode).  The engine's own ``generate`` /
+    ``generate_loop`` always run the single-token oracle.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 128,
                  prepack: bool | None = None, use_scan: bool = True,
                  mesh: jax.sharding.Mesh | None = None,
-                 kernel_backend: kreg.KernelBackend | str | None = None):
+                 kernel_backend: kreg.KernelBackend | str | None = None,
+                 speculate_k: int = 0):
         # normalise early so a typo fails at construction, not first step
         self.kernel_backend = kreg.coerce_backend(kernel_backend)
+        if not 0 <= int(speculate_k) <= 16:
+            raise ValueError(
+                f"speculate_k={speculate_k} out of range: the draft "
+                f"depth must be 0 (off) .. 16")
+        self.speculate_k = int(speculate_k)
         if prepack is None:
             prepack = cfg.pum.mode in ("int8", "pum")
         if prepack and cfg.pum.mode in ("int8", "pum"):

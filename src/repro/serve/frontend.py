@@ -238,6 +238,12 @@ class ServeFrontend:
                                  "ms from submit to first token")
         self._s_itl = m.summary("serve.itl_ms",
                                 "ms between consecutive tokens")
+        self._g_spec_accept = m.gauge(
+            "serve.spec.acceptance_rate",
+            "draft tokens accepted / proposed (0 when speculate_k=0)")
+        self._g_spec_advance = m.gauge(
+            "serve.spec.advance_per_step",
+            "mean tokens emitted per active slot per decode dispatch")
 
     # -- submission ---------------------------------------------------------
 
@@ -474,6 +480,10 @@ class ServeFrontend:
             self._g_occupancy.set(occ / self.sched.num_slots)
         if self._t0 is not None and now > self._t0:
             self._g_tok_s.set(self._total_tokens / (now - self._t0))
+        if self.sched.speculate_k > 0:
+            st = self.sched.spec_stats()
+            self._g_spec_accept.set(st["acceptance_rate"])
+            self._g_spec_advance.set(st["advance_per_step"])
 
     # -- lifecycle ----------------------------------------------------------
 

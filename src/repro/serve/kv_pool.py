@@ -45,6 +45,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import transformer
+from repro.models.attention import paged_write_cells
 from repro.serve.errors import BlockNotLive, BlockOutOfRange
 
 TRASH_BLOCK = 0
@@ -490,6 +491,88 @@ def freeze_inactive_rows(states_old: list[Any], states_new: list[Any],
                     lambda o, n: jnp.where(
                         active.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
                     st_old, st_new))
+    return out
+
+
+def spec_save_cells(states: list[Any], write_table: jax.Array,
+                    cache_index: jax.Array, s: int) -> list[Any]:
+    """Gather the pool cells a speculative verify step is about to
+    overwrite (each row's next ``s`` positions through ``write_table``).
+
+    Returns one entry per layer group: ``None`` for recurrent groups, a
+    ``{"k_pool", "v_pool"}`` dict of [n_groups, B, S, KV, hd] gathered
+    values for paged ones.  Together with :func:`spec_restore_cells`
+    this makes draft writes transactional: after restore, the pool is
+    bit-identical to one that only ever saw the accepted tokens."""
+    saved = []
+    for st in states:
+        if not is_paged_cache(st):
+            saved.append(None)
+            continue
+        bs = st["k_pool"].shape[2]
+        phys, off = paged_write_cells(write_table, cache_index, s, bs)
+        saved.append({name: st[name][:, phys, off]
+                      for name in ("k_pool", "v_pool")})
+    return saved
+
+
+def spec_restore_cells(states: list[Any], saved: list[Any],
+                       write_table: jax.Array, cache_index: jax.Array,
+                       s: int, advance: jax.Array) -> list[Any]:
+    """Roll back the rejected suffix of a speculative verify step's pool
+    writes: of each row's ``s`` probed cells, the first ``advance[b]``
+    are committed (kept), the rest get their :func:`spec_save_cells`
+    values scattered back.  Committed cells re-route their (redundant)
+    restore scatter to the trash block, exactly like inactive rows."""
+    out = []
+    rel = jnp.arange(s, dtype=jnp.int32)[None, :]
+    for st, sv in zip(states, saved):
+        if sv is None:
+            out.append(st)
+            continue
+        bs = st["k_pool"].shape[2]
+        phys, off = paged_write_cells(write_table, cache_index, s, bs)
+        committed = rel < advance[:, None]
+        rphys = jnp.where(committed,
+                          jnp.asarray(TRASH_BLOCK, phys.dtype), phys)
+        st = dict(st)
+        with jax.named_scope("spec_restore"):
+            for name in ("k_pool", "v_pool"):
+                st[name] = st[name].at[:, rphys, off].set(sv[name])
+        out.append(st)
+    return out
+
+
+def spec_select_recurrent(states_old: list[Any], states_new: list[Any],
+                          advance: jax.Array,
+                          active: jax.Array) -> list[Any]:
+    """Collapse a verify step's per-position recurrent states to each
+    row's accepted depth.
+
+    ``states_new`` recurrent leaves come from a ``collect_states``
+    forward: [n_groups, B, S, ...] with the state *after* consuming
+    position ``j`` at index j.  A row advancing by ``advance[b]`` tokens
+    has consumed positions 0..advance-1, so it adopts index
+    ``advance - 1``; inactive rows (advance 0) keep their pre-step
+    values, like :func:`freeze_inactive_rows`.  Paged pools pass
+    through (:func:`spec_restore_cells` owns their rollback)."""
+    idx = jnp.clip(advance - 1, 0, None).astype(jnp.int32)
+    out = []
+    with jax.named_scope("spec_select_state"):
+        for st_old, st_new in zip(states_old, states_new):
+            if is_paged_cache(st_old) or not st_old:
+                out.append(st_new)
+                continue
+
+            def sel(o, n):
+                ix = idx.reshape((1, -1, 1) + (1,) * (n.ndim - 3))
+                picked = jnp.take_along_axis(
+                    n, jnp.broadcast_to(ix, n.shape[:2] + (1,)
+                                        + n.shape[3:]), axis=2)[:, :, 0]
+                act = active.reshape((1, -1) + (1,) * (o.ndim - 2))
+                return jnp.where(act, picked.astype(o.dtype), o)
+
+            out.append(jax.tree_util.tree_map(sel, st_old, st_new))
     return out
 
 

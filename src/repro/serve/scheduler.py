@@ -115,9 +115,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.kernels import registry as kreg
 from repro.models import lm
 from repro.serve import kv_pool
-from repro.serve.engine import ServeEngine, make_decode_step, sample_token
+from repro.serve import spec as spec_mod
+from repro.serve.engine import (ServeEngine, make_decode_step,
+                                make_verify_step, sample_token)
 from repro.serve.errors import (InvalidRequest, PoolExhausted,
                                 RequestTooLarge, SchedulerStalled)
 
@@ -298,6 +301,124 @@ def make_slot_step(cfg: ModelConfig, kv_len: int | None = None):
     return slot_step
 
 
+def make_spec_step(cfg: ModelConfig, k: int, kv_len: int):
+    """Build the draft-and-verify speculative decode step (paged only).
+
+    (params, states, cur_tok [B,1], draft [B,k], cache_index [B],
+     keys [B,2], active [B] bool, temp [B], eos [B], gen [B],
+     max_toks [B], block_table [B,W], shared_cols [B])
+      -> (states', emitted [B,k+1], advance [B], cache_index', keys',
+          active', gen', done [B])
+
+    One verify forward scores all k+1 positions (current token + k
+    drafts); each row then commits the longest draft prefix that matches
+    what solo decode would have sampled, plus one bonus token — so every
+    active row advances by ``advance`` ∈ [1, k+1] tokens per dispatch,
+    and the emitted tokens are bit-identical to the single-token oracle
+    whatever the drafter proposed:
+
+      * the j-th emitted token is sampled from the verify logits at
+        position j with the *solo key chain's* j-th key (``fold_in`` by
+        the local step number, exactly ``generate_loop``'s schedule), so
+        greedy and sampled rows alike emit the oracle's token at every
+        accepted position;
+      * positions are only accepted while the *draft* matched the
+        emitted token, so every accepted position attended exclusively
+        to oracle-correct KV;
+      * rejected draft positions' KV writes are rolled back cell-wise
+        (``kv_pool.spec_save_cells`` / ``spec_restore_cells``): the
+        pool's net change is exactly a k=0 replay's;
+      * recurrent rows (xlstm/ssm) select the per-position state at
+        ``advance - 1`` from the verify scan's collected states
+        (``collect_states``) — bit-identical to stepping one token at a
+        time, because the scan *is* the per-token recurrence.
+
+    Termination mirrors ``slot_step`` per emitted token: the advance is
+    capped at the first EOS (inclusive) and at the remaining
+    ``max_tokens`` budget.  The paged-attention Pallas kernel is pinned
+    to the XLA composition inside this step only: the kernel's write
+    routing clips out-of-range columns into the last owned block,
+    while draft probes past the funded window must trash-route
+    (``attention.paged_write_cells``).
+    """
+    verify = make_verify_step(cfg, kv_len=kv_len)
+    s = k + 1
+
+    def spec_step(params, states, cur_tok, draft, cache_index, keys,
+                  active, temp, eos, gen, max_toks, block_table,
+                  shared_cols):
+        # the solo oracle's key chain for the next k+1 tokens: token
+        # gen-1+j is sampled after fold_in(..., gen-1+j) applied to the
+        # request key folded through every earlier step
+        chain = []
+        kk = keys
+        for j in range(s):
+            kk = jax.vmap(jax.random.fold_in)(kk, gen - 1 + j)
+            chain.append(kk)
+        chain = jnp.stack(chain, axis=1)                   # [B, k+1, 2]
+
+        block_table = _mask_block_table(block_table, active)
+        write_table = _mask_shared_cols(block_table, shared_cols)
+        tokens = jnp.concatenate([cur_tok, draft], axis=1)  # [B, k+1]
+
+        # transactional KV: snapshot the k+1 cells each row will write,
+        # run the verify forward, then restore the cells past each row's
+        # accepted advance — the pool's net change is a k=0 replay's
+        saved = kv_pool.spec_save_cells(states, write_table, cache_index,
+                                        s)
+        with kreg.use_backend(paged_attention="xla"):
+            logits, new_states = verify(params, states, tokens,
+                                        cache_index,
+                                        block_table=block_table,
+                                        write_table=write_table)
+
+        emitted = jnp.stack(
+            [sample_token(logits[:, j:j + 1], chain[:, j], temp)[:, 0]
+             for j in range(s)], axis=1)                   # [B, k+1]
+
+        # longest matching draft prefix, then the caps
+        match = (emitted[:, :k] == draft) if k else \
+            jnp.zeros((emitted.shape[0], 0), bool)
+        n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1),
+                        axis=1)
+        m_raw = n_acc + 1                                  # tokens to emit
+        valid = jnp.arange(s)[None, :] < m_raw[:, None]
+        is_eos = (emitted == eos[:, None]) & valid
+        any_eos = jnp.any(is_eos, axis=1)
+        first_eos = jnp.argmax(is_eos, axis=1).astype(jnp.int32)
+        eos_cap = jnp.where(any_eos, first_eos + 1, s)
+        len_cap = jnp.maximum(max_toks - gen, 1)           # >= 1 token
+        adv = jnp.where(active,
+                        jnp.minimum(jnp.minimum(m_raw, eos_cap), len_cap),
+                        0).astype(cache_index.dtype)
+
+        out_states = kv_pool.spec_restore_cells(new_states, saved,
+                                                write_table, cache_index,
+                                                s, adv)
+        # recurrent rows: pick the collected per-position state at the
+        # last accepted position; inactive rows keep their PRE-step
+        # state (the freeze_inactive_rows contract)
+        out_states = kv_pool.spec_select_recurrent(states, out_states,
+                                                   adv, active)
+        states = out_states
+        gen = gen + adv
+        eos_hit = any_eos & (adv == first_eos + 1)
+        done = active & (eos_hit | (gen >= max_toks))
+        # carry the key the solo loop would hold after the last emitted
+        # token (inactive rows churn to chain[0], exactly slot_step's
+        # step_keys churn — harmless, re-seeded at admission)
+        sel = jnp.clip(adv - 1, 0).astype(jnp.int32)[:, None, None]
+        keys = jnp.take_along_axis(
+            chain, jnp.broadcast_to(sel, (chain.shape[0], 1, 2)),
+            axis=1)[:, 0]
+        cache_index = cache_index + adv
+        active = active & ~done
+        return (states, emitted, adv, cache_index, keys, active, gen,
+                done)
+
+    return spec_step
+
+
 # ---------------------------------------------------------------------------
 # The scheduler
 # ---------------------------------------------------------------------------
@@ -331,6 +452,16 @@ class ContinuousBatchingScheduler:
     ``"interpret"``) ambient for every jitted step; ``None`` keeps the
     pre-registry defaults (the XLA composition unless ``use_kernel``).
     Completions are bit-identical across backends.
+
+    ``speculate_k > 0`` (paged only) switches decode dispatches to the
+    draft-and-verify speculative step (:func:`make_spec_step`):
+    ``drafter`` (``"ngram"`` — prompt-lookahead self-speculation — or
+    any object with ``propose(context, k)``, e.g.
+    :class:`~repro.serve.spec.ModelDrafter`) proposes k tokens per
+    active slot, one verify forward scores all k+1 positions, and each
+    slot advances by 1..k+1 tokens.  Output stays bit-identical to the
+    single-token oracle for any drafter; ``spec_stats()`` tracks the
+    acceptance rate and mean advance.
     """
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int = 4,
@@ -340,7 +471,8 @@ class ContinuousBatchingScheduler:
                  mesh: jax.sharding.Mesh | None = None,
                  prefix_cache: bool = False,
                  prefix_cache_entries: int = 0,
-                 kernel_backend=None):
+                 kernel_backend=None,
+                 speculate_k: int = 0, drafter="ngram"):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if chunked_prefill and kv_block_size <= 0:
@@ -351,9 +483,15 @@ class ContinuousBatchingScheduler:
             raise ValueError(
                 "prefix_cache shares paged pool blocks between requests; "
                 "set kv_block_size > 0 to enable it")
+        if speculate_k > 0 and kv_block_size <= 0:
+            raise ValueError(
+                "speculative decoding rolls rejected draft KV writes "
+                "back through the paged pool; set kv_block_size > 0 to "
+                "enable it")
         self.engine = ServeEngine(cfg, params, max_len=max_len,
                                   prepack=prepack, mesh=mesh,
-                                  kernel_backend=kernel_backend)
+                                  kernel_backend=kernel_backend,
+                                  speculate_k=speculate_k)
         self.mesh = mesh
         self.cfg = self.engine.cfg
         self.params = self.engine.params
@@ -375,6 +513,14 @@ class ContinuousBatchingScheduler:
             self._has_kv = kv_pool.has_kv_cache(self.cfg)
             self._step = jax.jit(make_slot_step(self.cfg, kv_len=max_len),
                                  donate_argnums=_STEP_DONATE)
+            self.speculate_k = self.engine.speculate_k
+            if self.speculate_k > 0:
+                self._drafter = spec_mod.resolve_drafter(
+                    drafter, self.cfg.vocab_size)
+                self._spec_step = jax.jit(
+                    make_spec_step(self.cfg, self.speculate_k,
+                                   kv_len=max_len),
+                    donate_argnums=_STEP_DONATE)
             self._chunk_prefill = self._build_chunk_prefill()
             self._has_recurrent = kv_pool.has_recurrent_state(self.cfg)
             cfg_, ml_ = self.cfg, max_len
@@ -395,9 +541,16 @@ class ContinuousBatchingScheduler:
                     kv_pool.restore_slot_recurrent, donate_argnums=(0,))
         else:
             self.prefix_caching = False
+            self.speculate_k = 0
             self._step = jax.jit(make_slot_step(self.cfg),
                                  donate_argnums=_STEP_DONATE)
             self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        # lifetime speculative-decoding counters (all zero at k=0)
+        self._spec_steps = 0           # spec dispatches run
+        self._spec_rows = 0            # active row-steps inside them
+        self._spec_proposed = 0        # draft tokens proposed
+        self._spec_accepted = 0        # draft tokens accepted
+        self._spec_emitted = 0         # tokens emitted (advance sum)
         self._reset()
 
     def _reset(self) -> None:
@@ -881,6 +1034,66 @@ class ContinuousBatchingScheduler:
 
     # -- step-wise driving -------------------------------------------------
 
+    def _decode_spec(self, step: int, out: dict[int, Completion],
+                     was_active: np.ndarray) -> None:
+        """One draft-and-verify dispatch: draft k tokens per active slot
+        on the host, run the jitted spec step, then harvest a *variable*
+        number of tokens per slot (``advance`` ∈ [1, k+1]) — each one a
+        normal streaming event, bit-identical to the single-token path.
+        """
+        k = self.speculate_k
+        contexts: list[list[int] | None] = [None] * self.num_slots
+        for slot in np.nonzero(was_active)[0]:
+            req = self._slot_req[slot]
+            contexts[slot] = (list(int(t) for t in req.prompt)
+                              + self._slot_toks[slot])
+        drafts = spec_mod.build_drafts(self._drafter, contexts, k,
+                                       self.cfg.vocab_size)
+        with self.engine.mesh_ctx():
+            (self.states, emitted, adv, cache_index, keys, active, gen,
+             done) = self._spec_step(
+                self.params, self.states, self._cur_tok,
+                jnp.asarray(drafts), self._cache_index, self._keys,
+                self._active, self._temp, self._eos, self._gen,
+                self._max_toks, jnp.asarray(self._block_table),
+                jnp.asarray(self._shared_cols))
+        emitted = np.array(emitted)
+        adv = np.array(adv)
+        self._cache_index = np.array(cache_index)
+        self._keys = np.array(keys)
+        self._active = np.array(active)
+        self._gen = np.array(gen)
+        done = np.asarray(done)
+
+        n_rows = int(was_active.sum())
+        self._spec_steps += 1
+        self._spec_rows += n_rows
+        self._spec_proposed += k * n_rows
+        for slot in np.nonzero(was_active)[0]:
+            req = self._slot_req[slot]
+            m = int(adv[slot])
+            self._spec_accepted += m - 1
+            self._spec_emitted += m
+            for j in range(m):
+                tok = int(emitted[slot, j])
+                self._slot_toks[slot].append(tok)
+                self._events.append(
+                    (req.rid, len(self._slot_toks[slot]) - 1, tok))
+            self._cur_tok[slot, 0] = int(emitted[slot, m - 1])
+            if done[slot]:
+                # the advance cap makes the last emitted token the
+                # decider: EOS-capped rows end exactly on their EOS
+                reason = ("eos"
+                          if int(emitted[slot, m - 1]) == req.eos_id
+                          else "length")
+                out[req.rid] = Completion(
+                    req.rid, list(int(t) for t in req.prompt),
+                    self._slot_toks[slot], reason,
+                    int(self._slot_admitted[slot]), step)
+                self._slot_req[slot] = None
+                self._slot_toks[slot] = []
+                self._retire_paged_slot(slot)
+
     def tick(self, step: int = 0,
              fault_hook: Callable[[str, int | None], None] | None = None,
              ) -> TickResult:
@@ -900,6 +1113,10 @@ class ContinuousBatchingScheduler:
             if fault_hook is not None:
                 fault_hook("decode", None)
             was_active = self._active.copy()
+            if self.speculate_k > 0:
+                self._decode_spec(step, out, was_active)
+                events, self._events = self._events, []
+                return TickResult(events, out, dispatches + 1, True)
             step_args = (self.params, self.states, self._cur_tok,
                          self._cache_index, self._keys, self._active,
                          self._temp, self._eos, self._gen, self._max_toks)
@@ -1083,6 +1300,24 @@ class ContinuousBatchingScheduler:
         allocator must be back to zero live blocks — the leak-freedom
         check the chaos suite pins."""
         return self._prefix.flush() if self._prefix else 0
+
+    def spec_stats(self) -> dict[str, float]:
+        """Lifetime speculative-decoding counters (all zero at k=0):
+        spec dispatches run, active row-steps inside them, draft tokens
+        proposed/accepted, tokens emitted, plus the two derived rates
+        the monitor gauges track — ``acceptance_rate`` (accepted /
+        proposed drafts) and ``advance_per_step`` (mean tokens emitted
+        per active row per dispatch; > 1 means speculation is winning).
+        """
+        return {"steps": self._spec_steps,
+                "rows": self._spec_rows,
+                "proposed": self._spec_proposed,
+                "accepted": self._spec_accepted,
+                "emitted": self._spec_emitted,
+                "acceptance_rate": (self._spec_accepted
+                                    / max(1, self._spec_proposed)),
+                "advance_per_step": (self._spec_emitted
+                                     / max(1, self._spec_rows))}
 
     def prefix_stats(self) -> dict[str, int]:
         """Lifetime prefix-cache counters (all zero when off):

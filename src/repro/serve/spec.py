@@ -1,0 +1,127 @@
+"""Drafters for speculative decoding: propose k tokens per slot.
+
+The scheduler's draft-and-verify path (``speculate_k > 0``) asks a
+drafter for k candidate continuation tokens per active slot, scores all
+k+1 positions (current token + drafts) in one batched jitted verify
+step, and commits the longest prefix that matches what the solo oracle
+would have emitted, plus one bonus token from the verify logits.  The
+accept rule makes correctness *drafter-independent*: a slot's emitted
+tokens are bit-identical to solo decode whatever the drafter proposes —
+a bad drafter only costs latency (acceptance rate), never output.
+
+Two built-ins:
+
+  * :class:`NgramDrafter` — prompt-lookahead self-speculation (a.k.a.
+    prompt-lookup decoding): find the longest n-gram suffix of the
+    slot's context earlier in that same context, and propose the tokens
+    that followed it.  No second model, no extra memory; pays off on
+    repetitive continuations and shared-prefix traces.
+  * :class:`ModelDrafter` — greedy k-token continuation from a second
+    (smaller) :class:`~repro.serve.engine.ServeEngine` built from the
+    config zoo.  The draft model's numerics are irrelevant to
+    correctness, so it crops/pads its context to one fixed window shape
+    (a single compiled prefill) instead of recompiling per length.
+
+Custom drafters only need ``propose(context, k) -> list[int]``.
+"""
+from __future__ import annotations
+
+from collections.abc import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class NgramDrafter:
+    """Prompt-lookahead self-speculation.
+
+    ``max_ngram`` bounds the suffix length matched against earlier
+    context (longest match wins, most recent occurrence on ties).
+    Proposals shorter than k — no match, or a match near the context
+    end — are padded by repeating the last proposed (or context) token;
+    the verify step's accept rule makes padding harmless.
+    """
+
+    def __init__(self, max_ngram: int = 3):
+        if max_ngram < 1:
+            raise ValueError(f"max_ngram must be >= 1, got {max_ngram}")
+        self.max_ngram = max_ngram
+
+    def propose(self, context: Sequence[int], k: int) -> list[int]:
+        ctx = list(context)
+        out: list[int] = []
+        for n in range(min(self.max_ngram, len(ctx) - 1), 0, -1):
+            suffix = ctx[-n:]
+            # most recent earlier occurrence of the n-gram suffix
+            for start in range(len(ctx) - n - 1, -1, -1):
+                if ctx[start:start + n] == suffix:
+                    out = ctx[start + n: start + n + k]
+                    break
+            if out:
+                break
+        pad = out[-1] if out else ctx[-1]
+        return (out + [pad] * k)[:k]
+
+
+class ModelDrafter:
+    """Greedy draft continuation from a second (small) engine.
+
+    ``window`` is the fixed context shape the draft engine sees: the
+    last ``window`` context tokens, left-padded with token 0 when the
+    context is shorter.  One shape = one compiled prefill; the padding
+    and cropping shift the draft model's predictions, but draft quality
+    only moves the acceptance rate, never the output.
+    """
+
+    def __init__(self, engine, window: int = 32):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.engine = engine
+        self.window = min(window, engine.max_len - 1)
+
+    def propose(self, context: Sequence[int], k: int) -> list[int]:
+        k = min(k, self.engine.max_len - self.window)
+        if k <= 0:
+            return []
+        ctx = list(context)[-self.window:]
+        ctx = [0] * (self.window - len(ctx)) + ctx
+        prompt = jnp.asarray([ctx], jnp.int32)
+        out = self.engine.generate(prompt, k, temperature=0.0)
+        return [int(t) for t in np.asarray(out[0, self.window:])]
+
+
+def resolve_drafter(drafter, vocab_size: int):
+    """Scheduler-side coercion: a name, a drafter object, or None.
+
+    Accepts ``"ngram"`` (the default self-speculation drafter), any
+    object with a ``propose`` method, or ``None`` (= ``"ngram"``).
+    ``vocab_size`` is kept by the wrapper for clamping proposals into
+    the embedding range — a drafter bug must not crash the verify step.
+    """
+    if drafter is None or drafter == "ngram":
+        drafter = NgramDrafter()
+    if not callable(getattr(drafter, "propose", None)):
+        raise TypeError(
+            f"drafter must be 'ngram' or expose propose(context, k); "
+            f"got {drafter!r}")
+    return drafter
+
+
+def build_drafts(drafter, contexts: Sequence[Sequence[int] | None], k: int,
+                 vocab_size: int) -> np.ndarray:
+    """[B, k] int32 draft matrix for one spec step.
+
+    ``contexts``: per-slot full token context (prompt + emitted), or
+    ``None`` for slots that are inactive this step (their row is zeros —
+    masked rows only ever write to the trash block).  Proposals are
+    clamped into the vocab and padded/cropped to exactly k.
+    """
+    out = np.zeros((len(contexts), k), np.int32)
+    for slot, ctx in enumerate(contexts):
+        if not ctx:
+            continue
+        prop = list(drafter.propose(ctx, k))
+        prop = (prop + [ctx[-1]] * k)[:k]
+        out[slot] = np.clip(np.asarray(prop, np.int64), 0,
+                            vocab_size - 1).astype(np.int32)
+    return out

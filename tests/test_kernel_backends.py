@@ -8,7 +8,6 @@ for every kernel family over random shapes / bit widths / block sizes
 parametrisation), and (3) the scheduler leg: completions are
 bit-identical whichever backend serves the decode steps.
 """
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -78,8 +77,8 @@ def test_explicit_subfloor_block_m_raises_typed_error():
     # ...and through the public op
     x = jnp.zeros((4, 64), jnp.int32)
     w = jnp.zeros((64, 64), jnp.int32)
-    with pytest.raises(KernelTileError), warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
+    with pytest.raises(KernelTileError), \
+            pytest.warns(DeprecationWarning, match="block_m"):
         bitslice_mvm(x, w, backend=KERNEL, block_m=2)
 
 
@@ -131,10 +130,14 @@ def test_bitslice_mvm_backends_bit_identical(seed, m, k, n, bits, block):
     w = jnp.asarray(rng.integers(-qmax, qmax + 1, size=(k, n)), jnp.int32)
     ref = bitslice_mvm(x, w, weight_bits=wb, bits_per_slice=bps,
                        backend="xla")
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
+    if block is None:
         got = bitslice_mvm(x, w, weight_bits=wb, bits_per_slice=bps,
-                           backend=KERNEL, block_n=block, block_k=block)
+                           backend=KERNEL)
+    else:
+        with pytest.warns(DeprecationWarning, match="block_m/block_n"):
+            got = bitslice_mvm(x, w, weight_bits=wb, bits_per_slice=bps,
+                               backend=KERNEL, block_n=block,
+                               block_k=block)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 

@@ -11,6 +11,7 @@ from repro.kernels.bitslice_mvm import bitslice_mvm, bitslice_mvm_ref
 from repro.kernels.bitslice_mvm.kernel import bitslice_mvm_pallas
 from repro.kernels.gf2_mvm import gf2_mvm, gf2_mvm_ref
 from repro.kernels.gf2_mvm.kernel import gf2_mvm_pallas
+from repro.kernels.registry import KernelBackend
 
 
 # ---------------------------------------------------------------------------
@@ -74,16 +75,17 @@ def test_bitslice_adaptive_block_m_no_128_padding():
     """Regression: `bm` used to be computed but never passed to the
     kernel, so an M=1 decode MVM padded its row axis to 128.  The adaptive
     block must cover small M with the minimal hardware tile instead."""
-    from repro.kernels.bitslice_mvm.ops import _choose_block_m
-    assert _choose_block_m(1, 128, interpret=True) == 8
-    assert _choose_block_m(5, 128, interpret=True) == 8
-    assert _choose_block_m(20, 128, interpret=True) == 32
-    assert _choose_block_m(128, 128, interpret=True) == 128
-    assert _choose_block_m(300, 128, interpret=True) == 128
+    from repro.kernels.registry import choose_block_m
+    interp, pallas = KernelBackend.INTERPRET, KernelBackend.PALLAS
+    assert choose_block_m(1, 128, interp) == 8
+    assert choose_block_m(5, 128, interp) == 8
+    assert choose_block_m(20, 128, interp) == 32
+    assert choose_block_m(128, 128, interp) == 128
+    assert choose_block_m(300, 128, interp) == 128
     # real-TPU int8 tiles need >= 32 sublanes
-    assert _choose_block_m(1, 128, interpret=False) == 32
+    assert choose_block_m(1, 128, pallas) == 32
     # adaptive block never exceeds the requested block_m
-    assert _choose_block_m(1, 8, interpret=True) == 8
+    assert choose_block_m(1, 8, interp) == 8
 
     # a [1, K] decode MVM runs (with an 8-row tile, not 128) and is exact
     rng = np.random.default_rng(11)
